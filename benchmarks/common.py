@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: timing + HLO inspection."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def time_fn(fn: Callable, *args, iters: int = 50, warmup: int = 5,
+            min_time_s: float = 0.0) -> float:
+    """Mean wall seconds per call of a jitted fn (blocks on output)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    n = 0
+    while True:
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        n += iters
+        dt = time.perf_counter() - t0
+        if dt >= min_time_s or n >= iters:
+            return dt / n
+
+
+def compiled_of(fn: Callable, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def hlo_op_counts(fn: Callable, *args, ops=("transpose", "reshape",
+                                            "gather", "subtract", "dot",
+                                            "add", "scatter")) -> Dict[str, int]:
+    from repro.roofline.hlo import op_census
+
+    return op_census(compiled_of(fn, *args).as_text(), ops)
+
+
+def hlo_flops(fn: Callable, *args) -> float:
+    return float(compiled_of(fn, *args).cost_analysis().get("flops", 0.0))

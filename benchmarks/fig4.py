@@ -1,0 +1,44 @@
+"""Fig. 3/4 analogue: optimized-HLO op census per rewrite stage.
+
+The paper shows Netron graphs / Perfetto traces where each stage
+removes DSP-bound op classes. Our substrate's equivalent evidence:
+counts of subtract / transpose / reshape / gather ops in the compiled
+XLA graph, per stage. Opt-1 must eliminate subtracts from the steady
+state; Opt-2 must eliminate the system-matrix transposes and exporter
+reshapes (the remaining data reshapes/layout ops are XLA-internal).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import hlo_op_counts
+from repro.core.filters import get_filter
+from repro.core.rewrites import build_stage, canonical_to_stage
+
+OPS = ("subtract", "transpose", "reshape", "gather", "dot", "add")
+
+
+def census(model, stage: str, N: int = 1):
+    step, _ = build_stage(model, stage, N=N)
+    rng = np.random.default_rng(0)
+    x0 = np.tile(model.x0, (N, 1)).astype(np.float32)
+    P0 = np.tile(model.P0, (N, 1, 1)).astype(np.float32)
+    z0 = rng.normal(size=(N, model.m)).astype(np.float32)
+    x, P, z = canonical_to_stage(stage, jnp.asarray(x0), jnp.asarray(P0),
+                                 jnp.asarray(z0), model.n, model.m)
+    return hlo_op_counts(step, x, P, z, ops=OPS)
+
+
+def run(csv: List[str]) -> None:
+    for kind in ("lkf", "ekf"):
+        model = get_filter(kind)
+        for stage, N in (("baseline", 1), ("opt1", 1), ("opt2", 1),
+                         ("batched_lanes", 200)):
+            c = census(model, stage, N)
+            csv.append(
+                f"fig4/{kind}/{stage},0,"
+                + ";".join(f"{k}={c[k]}" for k in OPS))

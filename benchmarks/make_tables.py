@@ -1,0 +1,37 @@
+"""Inject the roofline tables into EXPERIMENTS.md placeholders.
+
+  PYTHONPATH=src python -m benchmarks.make_tables
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from benchmarks.roofline import table
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def main() -> None:
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    for mesh in ("single", "multi"):
+        marker = f"<!-- ROOFLINE_TABLE_{mesh.upper()} -->"
+        block = f"{marker}\n\n{table(mesh)}\n"
+        pat = re.compile(re.escape(marker) + r"(\n\n\|.*?\n)?(?=\n)",
+                         re.DOTALL)
+        if marker in md:
+            # replace marker (+ any previously injected table)
+            start = md.index(marker)
+            end = start + len(marker)
+            # consume a previously injected table if present
+            rest = md[end:]
+            m = re.match(r"\n\n(\|[^\n]*\n)+", rest)
+            if m:
+                end += m.end()
+            md = md[:start] + block + md[end:]
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("tables injected")
+
+
+if __name__ == "__main__":
+    main()

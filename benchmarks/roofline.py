@@ -1,0 +1,63 @@
+"""Roofline table: reads results/dryrun/ JSONs (written by
+repro.launch.dryrun) and prints the three-term analysis per cell."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(mesh: str):
+    cells = []
+    root = RESULTS / mesh
+    if not root.exists():
+        return cells
+    for f in sorted(root.glob("*/*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def run(csv: List[str], mesh: str = "single") -> None:
+    for rec in load_cells(mesh):
+        tag = f"roofline/{rec['mesh']}/{rec['arch']}/{rec['shape']}"
+        if not rec.get("supported", True):
+            csv.append(f"{tag},0,skip={rec['skip_reason']}")
+            continue
+        r = rec.get("roofline")
+        if not r:
+            csv.append(f"{tag},0,no-probe")
+            continue
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        csv.append(
+            f"{tag},{bound * 1e6:.0f},"
+            f"tc={r['t_compute_s']:.4f};tm={r['t_memory_s']:.4f};"
+            f"tcoll={r['t_collective_s']:.4f};dom={r['dominant']};"
+            f"useful={r['useful_fraction']:.3f};"
+            f"roofline_frac={r['roofline_fraction']:.4f}")
+
+
+def table(mesh: str = "single") -> str:
+    """Markdown table for EXPERIMENTS.md."""
+    rows = [
+        "| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | dominant "
+        "| useful | roofline frac | fits 16G (tpu-est) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in load_cells(mesh):
+        if not rec.get("supported", True):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skipped: {rec['skip_reason']} | — | — | — |")
+            continue
+        r = rec.get("roofline", {})
+        f = rec.get("full", {})
+        if not r:
+            continue
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['t_compute_s']:.4g} "
+            f"| {r['t_memory_s']:.4g} | {r['t_collective_s']:.4g} "
+            f"| {r['dominant']} | {r['useful_fraction']:.3f} "
+            f"| {r['roofline_fraction']:.4f} "
+            f"| {f.get('fits_16g_tpu_est', '—')} |")
+    return "\n".join(rows)

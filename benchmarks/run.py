@@ -1,0 +1,43 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (0 in the us column for
+pure-analysis rows).
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig4,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+from typing import List
+
+ALL = ("accuracy", "fig4", "batching", "table1", "roofline")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=",".join(ALL))
+    args = ap.parse_args(argv)
+    wanted = [w for w in args.only.split(",") if w]
+    csv: List[str] = []
+    failed = []
+    for name in wanted:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run(csv)
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, repr(e)))
+            traceback.print_exc()
+    print("name,us_per_call,derived")
+    for line in csv:
+        print(line)
+    if failed:
+        print(f"\n{len(failed)} bench module(s) failed:", file=sys.stderr)
+        for n, e in failed:
+            print(f"  {n}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Table I analogue: latency / throughput of every (filter x stage x N)
+variant on this container's CPU-XLA backend.
+
+The paper's absolute numbers are NPU-silicon-specific; what reproduces
+is the SHAPE of the table: per-stage single-filter latencies in the
+same band (rewrites are latency-neutral at N=1), and the batched regime
+where the restructured graph pays off. The beyond-paper rows
+(batched_lanes, katana_bank-ref semantics) show the N^2 FLOP collapse
+vs the paper's block-diagonal expansion.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core.filters import get_filter
+from repro.core.rewrites import build_stage, canonical_to_stage
+
+STAGES_1 = ("baseline", "opt1", "opt2")
+STAGES_N = ("batched_blockdiag", "batched_lanes")
+N_BATCH = 200
+
+
+def bench_stage(model, stage: str, N: int, iters: int, rng) -> float:
+    step, _ = build_stage(model, stage, N=N)
+    x0 = np.tile(model.x0, (N, 1)).astype(np.float32)
+    P0 = np.tile(model.P0, (N, 1, 1)).astype(np.float32)
+    z0 = rng.normal(size=(N, model.m)).astype(np.float32)
+    x, P, z = canonical_to_stage(stage, jnp.asarray(x0), jnp.asarray(P0),
+                                 jnp.asarray(z0), model.n, model.m)
+    jitted = jax.jit(step)
+    return time_fn(jitted, x, P, z, iters=iters, warmup=2)
+
+
+def run(csv: List[str]) -> None:
+    rng = np.random.default_rng(0)
+    for kind in ("lkf", "ekf"):
+        model = get_filter(kind)
+        for stage in STAGES_1:
+            s = bench_stage(model, stage, 1, iters=200, rng=rng)
+            csv.append(f"table1/{kind}/{stage}/N=1,{s * 1e6:.2f},"
+                       f"fps={1.0 / s:.1f}")
+        for stage in STAGES_N:
+            iters = 2 if stage == "batched_blockdiag" else 50
+            s = bench_stage(model, stage, N_BATCH, iters=iters, rng=rng)
+            csv.append(f"table1/{kind}/{stage}/N={N_BATCH},{s * 1e6:.2f},"
+                       f"fps={1.0 / s:.1f}")

@@ -1,0 +1,65 @@
+"""End-to-end MOT serving driver — the paper's Fig. 5 scenario.
+
+A (stub) detector produces noisy bounding-box centroids per frame for a
+scene with target births/deaths and clutter; the KATANA TrackingEngine
+(one jitted frame step: predict -> gate -> greedy associate -> update ->
+spawn -> prune) maintains the track table. Reports throughput and
+MOTA-style counts — the serving analogue of the paper's live-video demo.
+
+  PYTHONPATH=src python examples/tracking_pipeline.py --filter ekf
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.filters import get_filter  # noqa: E402
+from repro.core.tracker import TrackerConfig  # noqa: E402
+from repro.data.trajectories import SceneConfig, mot_scene  # noqa: E402
+from repro.serving.engine import TrackingEngine  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--filter", default="lkf", choices=["lkf", "ekf"])
+    ap.add_argument("--frames", type=int, default=150)
+    ap.add_argument("--targets", type=int, default=6)
+    ap.add_argument("--clutter", type=float, default=1.0)
+    args = ap.parse_args()
+
+    model = get_filter(args.filter)
+    engine = TrackingEngine(model, TrackerConfig(capacity=64, max_meas=32))
+    scene = SceneConfig(T=args.frames, max_targets=args.targets,
+                        clutter_rate=args.clutter, max_meas=32)
+    z, valid, truth = mot_scene(model, scene, seed=3)
+
+    errs = []
+    count_err = []
+    for t in range(scene.T):
+        k = int(valid[t].sum())
+        tracks = engine.submit(z[t][valid[t]][:k])
+        n_true = len(truth[t])
+        count_err.append(abs(len(tracks) - n_true))
+        # localization error of matched (nearest) tracks
+        for tid, xt in truth[t]:
+            if tracks:
+                d = min(np.linalg.norm(tr.state[:3] - xt[:3])
+                        for tr in tracks)
+                errs.append(d)
+    fps = engine.stats.fps
+    print(f"filter={args.filter} frames={scene.T} "
+          f"throughput={fps:.1f} FPS ({1e3 / fps:.2f} ms/frame)")
+    print(f"mean count error (last 50 frames): "
+          f"{np.mean(count_err[-50:]):.2f}")
+    print(f"mean localization error (matched): {np.mean(errs):.3f} "
+          f"(measurement noise sigma ~{np.sqrt(model.R[0, 0]):.3f})")
+    frame_budget_pct = 100.0 * (1.0 / fps) / (1.0 / 30.0)
+    print(f"tracker consumes {frame_budget_pct:.1f}% of a 30 FPS frame "
+          f"budget (paper: <1% on the NPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""KATANA core: filters, NPU->TPU graph rewrites, filter bank, tracker."""
+from repro.core.filters import FilterModel, get_filter, make_cv_lkf, make_ctra_ekf  # noqa: F401
+from repro.core.rewrites import STAGES, build_stage, run_sequence, small_inv  # noqa: F401
+from repro.core.bank import BankState, init_bank  # noqa: F401
+from repro.core.tracker import TrackerConfig, frame_step, make_jitted_tracker  # noqa: F401

@@ -1,0 +1,173 @@
+"""Filter models: the paper's two workloads.
+
+LKF — constant-velocity, n=6 state [px,py,pz,vx,vy,vz], m=3 position
+measurements (paper §V: "3-D position and velocity").
+
+EKF — constant-turn-rate-with-acceleration, n=8 state
+[px,py,pz,v,theta,omega,a,vz], m=4 measurements [px,py,pz,theta]
+(paper §V: "constant-turn-rate with acceleration"). The dynamics are
+nonlinear (the EKF linearizes via the Jacobian F_k each step); the
+measurement map stays linear so the H_neg rewrite applies verbatim.
+
+All matrices are built once at model-construction time, mirroring the
+paper's constant folding: anything static (F, H, H_neg, their
+transposes, Q, R, I) is a trace-time constant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True, eq=False)  # identity hash: usable as jit static arg
+class FilterModel:
+    """A (possibly nonlinear-dynamics) filter with linear measurements."""
+
+    name: str
+    n: int  # state dim
+    m: int  # measurement dim
+    is_linear: bool
+    F: np.ndarray  # (n,n) — LKF transition (EKF: linearization point 0)
+    H: np.ndarray  # (m,n) — measurement matrix (linear for both workloads)
+    Q: np.ndarray  # (n,n) process noise
+    R: np.ndarray  # (m,m) measurement noise
+    x0: np.ndarray  # (n,) default initial state
+    P0: np.ndarray  # (n,n) default initial covariance
+    dt: float = 1.0 / 30.0
+    # Nonlinear dynamics (EKF): f(x)->x', jac(x)->(n,n). None for LKF.
+    f: Optional[Callable] = None
+    F_jac: Optional[Callable] = None
+    # Pure-numpy float64 mirrors for the oracle in ref.py.
+    f_np: Optional[Callable] = None
+    F_jac_np: Optional[Callable] = None
+
+    def predict_mean(self, x):
+        """Propagate the state mean (works on jnp arrays, batched or not)."""
+        if self.is_linear:
+            return x @ jnp.asarray(self.F, x.dtype).T
+        return self.f(x)
+
+    def jacobian(self, x):
+        """(.., n, n) transition Jacobian at x."""
+        if self.is_linear:
+            F = jnp.asarray(self.F, x.dtype)
+            return jnp.broadcast_to(F, x.shape[:-1] + (self.n, self.n))
+        return self.F_jac(x)
+
+
+def make_cv_lkf(dt: float = 1.0 / 30.0, q: float = 1e-2, r: float = 1e-1,
+                p0: float = 1.0) -> FilterModel:
+    """3-D constant-velocity LKF (paper's n=6 workload)."""
+    n, m = 6, 3
+    F = np.eye(n)
+    F[:3, 3:] = dt * np.eye(3)
+    H = np.zeros((m, n))
+    H[:, :3] = np.eye(3)
+    # Discretized white-noise-acceleration process covariance.
+    G = np.zeros((n, 3))
+    G[:3] = 0.5 * dt * dt * np.eye(3)
+    G[3:] = dt * np.eye(3)
+    Q = q * (G @ G.T) + 1e-9 * np.eye(n)
+    R = r * np.eye(m)
+    return FilterModel(
+        name="lkf-cv6", n=n, m=m, is_linear=True, F=F, H=H, Q=Q, R=R,
+        x0=np.zeros(n), P0=p0 * np.eye(n), dt=dt,
+    )
+
+
+def make_ctra_ekf(dt: float = 1.0 / 30.0, q: float = 1e-2, r: float = 1e-1,
+                  p0: float = 1.0) -> FilterModel:
+    """Constant-turn-rate + acceleration EKF (paper's n=8 workload).
+
+    State: [px, py, pz, v, theta, omega, a, vz]; first-order discretized
+    CTRA dynamics (no omega->0 singularity; pure mul/add + sin/cos, in
+    the paper's spirit of keeping the graph on the matrix/vector units).
+    """
+    n, m = 8, 4
+
+    def f(x):
+        px, py, pz, v, th, om, a, vz = [x[..., i] for i in range(n)]
+        c, s = jnp.cos(th), jnp.sin(th)
+        return jnp.stack(
+            [
+                px + v * c * dt,
+                py + v * s * dt,
+                pz + vz * dt,
+                v + a * dt,
+                th + om * dt,
+                om,
+                a,
+                vz,
+            ],
+            axis=-1,
+        )
+
+    def F_jac(x):
+        v, th = x[..., 3], x[..., 4]
+        c, s = jnp.cos(th), jnp.sin(th)
+        batch = x.shape[:-1]
+        F = jnp.broadcast_to(jnp.eye(n, dtype=x.dtype), batch + (n, n))
+        upd = {
+            (0, 3): c * dt, (0, 4): -v * s * dt,
+            (1, 3): s * dt, (1, 4): v * c * dt,
+            (2, 7): jnp.full(batch, dt, x.dtype),
+            (3, 6): jnp.full(batch, dt, x.dtype),
+            (4, 5): jnp.full(batch, dt, x.dtype),
+        }
+        for (i, j), val in upd.items():
+            F = F.at[..., i, j].set(val)
+        return F
+
+    def f_np(x):
+        x = np.asarray(x, np.float64)
+        px, py, pz, v, th, om, a, vz = x
+        c, s = np.cos(th), np.sin(th)
+        return np.array(
+            [px + v * c * dt, py + v * s * dt, pz + vz * dt, v + a * dt,
+             th + om * dt, om, a, vz], np.float64)
+
+    def F_jac_np(x):
+        x = np.asarray(x, np.float64)
+        v, th = x[3], x[4]
+        c, s = np.cos(th), np.sin(th)
+        F = np.eye(n)
+        F[0, 3] = c * dt
+        F[0, 4] = -v * s * dt
+        F[1, 3] = s * dt
+        F[1, 4] = v * c * dt
+        F[2, 7] = dt
+        F[3, 6] = dt
+        F[4, 5] = dt
+        return F
+
+    H = np.zeros((m, n))
+    H[0, 0] = H[1, 1] = H[2, 2] = 1.0  # position
+    H[3, 4] = 1.0  # heading
+    Q = q * np.eye(n)
+    Q[5, 5] = Q[6, 6] = q * 0.1  # slowly-varying turn-rate / accel
+    R = r * np.eye(m)
+    x0 = np.zeros(n)
+    x0[3] = 1.0  # unit speed so the Jacobian is non-degenerate at init
+    # Linearization point for the "F" constant: Jacobian at x0.
+    F0 = np.eye(n)
+    F0[0, 3] = dt
+    F0[1, 4] = dt
+    F0[2, 7] = dt
+    F0[3, 6] = dt
+    F0[4, 5] = dt
+    return FilterModel(
+        name="ekf-ctra8", n=n, m=m, is_linear=False, F=F0, H=H, Q=Q, R=R,
+        x0=x0, P0=p0 * np.eye(n), dt=dt, f=f, F_jac=F_jac,
+        f_np=f_np, F_jac_np=F_jac_np,
+    )
+
+
+def get_filter(kind: str, dt: float = 1.0 / 30.0) -> FilterModel:
+    if kind == "lkf":
+        return make_cv_lkf(dt=dt)
+    if kind == "ekf":
+        return make_ctra_ekf(dt=dt)
+    raise KeyError(f"unknown filter kind {kind!r}")

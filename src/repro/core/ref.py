@@ -1,0 +1,69 @@
+"""float64 numpy oracle for every KATANA stage and kernel.
+
+This is the ground-truth Kalman recursion, written in the clearest
+possible form with no performance concerns. All rewrite stages
+(baseline / opt1 / opt2 / batched-blockdiag / batched-lanes) and the
+Pallas ``katana_bank`` kernel must match it to fp32 tolerance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.filters import FilterModel
+
+
+def predict(model: FilterModel, x: np.ndarray, P: np.ndarray):
+    x = np.asarray(x, np.float64)
+    P = np.asarray(P, np.float64)
+    if model.is_linear:
+        F = np.asarray(model.F, np.float64)
+        x_pred = F @ x
+    else:
+        x_pred = model.f_np(x)
+        F = model.F_jac_np(x)
+    P_pred = F @ P @ F.T + np.asarray(model.Q, np.float64)
+    return x_pred, P_pred
+
+
+def update(model: FilterModel, x_pred: np.ndarray, P_pred: np.ndarray,
+           z: np.ndarray):
+    H = np.asarray(model.H, np.float64)
+    R = np.asarray(model.R, np.float64)
+    y = np.asarray(z, np.float64) - H @ x_pred
+    S = H @ P_pred @ H.T + R
+    K = P_pred @ H.T @ np.linalg.inv(S)
+    x_new = x_pred + K @ y
+    P_new = (np.eye(model.n) - K @ H) @ P_pred
+    P_new = 0.5 * (P_new + P_new.T)
+    return x_new, P_new
+
+
+def step(model: FilterModel, x: np.ndarray, P: np.ndarray, z: np.ndarray):
+    return update(model, *predict(model, x, P), z)
+
+
+def run(model: FilterModel, zs: np.ndarray, x0=None, P0=None):
+    """Filter a (T, m) measurement sequence; returns (T, n) states."""
+    x = np.asarray(model.x0 if x0 is None else x0, np.float64)
+    P = np.asarray(model.P0 if P0 is None else P0, np.float64)
+    out = np.zeros((len(zs), model.n))
+    covs = np.zeros((len(zs), model.n, model.n))
+    for t, z in enumerate(zs):
+        x, P = step(model, x, P, z)
+        out[t] = x
+        covs[t] = P
+    return out, covs
+
+
+def run_batched(model: FilterModel, zs: np.ndarray, x0: np.ndarray,
+                P0: np.ndarray):
+    """zs: (T, N, m); x0: (N, n); P0: (N, n, n) -> (T, N, n)."""
+    T, N, _ = zs.shape
+    out = np.zeros((T, N, model.n))
+    xs = np.array(x0, np.float64)
+    Ps = np.array(P0, np.float64)
+    for t in range(T):
+        for k in range(N):
+            xs[k], Ps[k] = step(model, xs[k], Ps[k], zs[t, k])
+        out[t] = xs
+    return out, xs, Ps

@@ -1,0 +1,113 @@
+"""flash_attention: tiled online-softmax attention Pallas TPU kernel.
+
+Grid (BH, nq, nk), kv innermost: the (Bq, Bk) score tile lives in
+VMEM/VREGs only — no (S, S) tensor ever reaches HBM, which removes the
+dominant memory-roofline term of the XLA fallback (see EXPERIMENTS.md
+§Perf). Running max/denominator/accumulator persist in VMEM scratch
+across the kv sweep. Causal and sliding-window masks skip fully-masked
+tiles via pl.when (compute-term win on top of the memory win).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int, nk: int, seq_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # tile-level mask decisions (static per grid point at run time)
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k - 1
+                              >= q_start - window + 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (Bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (Bk, d)
+        v = v_ref[0].astype(jnp.float32)            # (Bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (Bq, Bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        ok = kpos < seq_k
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window is not None:
+            ok = jnp.logical_and(ok, qpos - kpos < window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[:, 0]                         # (Bq,)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[:, 0] = l_scr[:, 0] * alpha + p.sum(axis=-1)
+        m_scr[:, 0] = m_new
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, 0], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "block_q", "block_k",
+                     "interpret"))
+def flash_attention_bhsd(q, k, v, *, scale: float, causal: bool = True,
+                         window: Optional[int] = None, block_q: int = 512,
+                         block_k: int = 512, interpret: bool = True):
+    """q: (BH, Sq, d); k/v: (BH, Sk, d) -> (BH, Sq, d).
+
+    Sq % block_q == 0 and Sk % block_k == 0 (ops.py pads)."""
+    BH, Sq, d = q.shape
+    Sk = k.shape[1]
+    nq, nk = Sq // block_q, Sk // block_k
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk, seq_k=Sk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

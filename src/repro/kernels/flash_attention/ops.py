@@ -1,0 +1,96 @@
+"""jit'd wrapper: (B, S, H, d) GQA layout in, padding + head broadcast,
+custom_vjp with a memory-bounded blockwise backward (forward = Pallas
+kernel; backward recomputes per q-block under jax.checkpoint, so neither
+direction materializes S x S)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_seq(x, block, axis):
+    S = x.shape[axis]
+    pad = (-S) % block
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q, k, v, scale: float, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = True):
+    """q: (B, Sq, H, d); k/v: (B, Sk, H, d) (already GQA-broadcast).
+
+    Returns (B, Sq, H, d)."""
+    return _fwd(q, k, v, scale, causal, window, block_q, block_k,
+                interpret)[0]
+
+
+def _fwd(q, k, v, scale, causal, window, block_q, block_k, interpret):
+    B, Sq, H, d = q.shape
+    Sk = k.shape[1]
+    qb = _pad_seq(q.transpose(0, 2, 1, 3).reshape(B * H, Sq, d), block_q, 1)
+    kb = _pad_seq(k.transpose(0, 2, 1, 3).reshape(B * H, Sk, d), block_k, 1)
+    vb = _pad_seq(v.transpose(0, 2, 1, 3).reshape(B * H, Sk, d), block_k, 1)
+    o = flash_attention_bhsd(qb, kb, vb, scale=scale, causal=causal,
+                             window=window, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    o = o[:, :Sq].reshape(B, H, Sq, d).transpose(0, 2, 1, 3)
+    return o, (q, k, v)
+
+
+def _bwd(scale, causal, window, block_q, block_k, interpret, res, do):
+    """Blockwise backward: per q-block dense attention recomputed under
+    jax.checkpoint — O(block_q x Sk) transients, never S x S."""
+    q, k, v = res
+    B, Sq, H, d = q.shape
+    bq = min(block_q, Sq)
+    nq = max(1, Sq // bq)
+
+    def _block(qq, kk, vv, qpos0):
+        s = jnp.einsum("bqhd,bkhd->bhqk", qq.astype(jnp.float32),
+                       kk.astype(jnp.float32)) * scale
+        qpos = qpos0 + jnp.arange(qq.shape[1])[:, None]
+        kpos = jnp.arange(kk.shape[1])[None, :]
+        ok = jnp.ones(s.shape[-2:], bool)
+        if causal:
+            ok &= kpos <= qpos
+        if window is not None:
+            ok &= qpos - kpos < window
+        s = jnp.where(ok, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p.astype(vv.dtype), vv)
+
+    blk = jax.checkpoint(_block, static_argnums=())
+
+    def body(carry, i):
+        dq, dk, dv = carry
+        qb = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, 1)
+        dob = jax.lax.dynamic_slice_in_dim(do, i * bq, bq, 1)
+        _, vjp = jax.vjp(lambda qq, kk, vv: blk(qq, kk, vv, i * bq),
+                         qb, k, v)
+        dqb, dkb, dvb = vjp(dob)
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, dqb.astype(q.dtype), i * bq, 1)
+        return (dq, dk + dkb.astype(jnp.float32),
+                dv + dvb.astype(jnp.float32)), None
+
+    init = (jnp.zeros_like(q),
+            jnp.zeros(k.shape, jnp.float32),
+            jnp.zeros(v.shape, jnp.float32))
+    (dq, dk, dv), _ = jax.lax.scan(body, init, jnp.arange(nq))
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd, _bwd)

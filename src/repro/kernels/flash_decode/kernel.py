@@ -1,0 +1,95 @@
+"""flash_decode: one-token KV-cache attention Pallas TPU kernel.
+
+Grid (B, n_kv_blocks): each program streams its batch-row's cache
+through VMEM in (block_k, H, d) tiles, maintaining running max /
+denominator / weighted-sum scratch per head. Emits un-normalized
+(acc, m, l) so the caller can merge the current token's self-attention
+term (and, when the cache is sequence-sharded across chips, so the
+partial results merge across shards with the same LSE algebra —
+distributed flash-decode, DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr,
+            *, scale: float, nk: int):
+    jk = pl.program_id(1)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (H, d)
+    k = k_ref[0].astype(jnp.float32)          # (Bk, H, d)
+    v = v_ref[0].astype(jnp.float32)          # (Bk, H, d)
+    # s[h, t] = q[h, :] . k[t, h, :]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale  # (H, Bk)
+    m_prev = m_scr[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])           # (H, Bk)
+    l_scr[:, 0] = l_scr[:, 0] * alpha + p.sum(axis=-1)
+    m_scr[:, 0] = m_new
+    # acc[h, :] += sum_t p[h, t] v[t, h, :]
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)   # (H, d)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+        m_ref[0] = m_scr[...]
+        l_ref[0] = l_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def flash_decode_partial(q, k, v, *, scale: float, block_k: int = 1024,
+                         interpret: bool = True):
+    """q: (B, H, d); k/v: (B, T, H, d) head-broadcast cache.
+
+    Returns un-normalized (acc (B,H,d) f32, m (B,H,1) f32, l (B,H,1)
+    f32): out = acc / l after any cross-shard / self-token merge."""
+    B, H, d = q.shape
+    T = k.shape[1]
+    nk = T // block_k
+    assert T % block_k == 0, (T, block_k)
+    kern = functools.partial(_kernel, scale=scale, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1, H, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, H, d), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, block_k, H, d), lambda b, j: (b, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, H, 1), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, H, 1), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

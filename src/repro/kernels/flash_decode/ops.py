@@ -1,0 +1,48 @@
+"""jit'd wrapper: GQA broadcast + self-token LSE merge in jnp (one
+token's worth of algebra; the cache sweep is the kernel's)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_decode.kernel import flash_decode_partial
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def flash_decode(q, k_cache, v_cache, k_new, v_new, *, scale: float,
+                 block_k: int = 1024, interpret: bool = True):
+    """q/k_new/v_new: (B, 1, H|K, d); cache: (B, T, K, d).
+
+    Returns (B, 1, H, d)."""
+    B, _, H, d = q.shape
+    K = k_cache.shape[2]
+    rep = H // K
+    kb = jnp.repeat(k_cache, rep, axis=2) if rep > 1 else k_cache
+    vb = jnp.repeat(v_cache, rep, axis=2) if rep > 1 else v_cache
+    acc, m, l = flash_decode_partial(q[:, 0], kb, vb, scale=scale,
+                                     block_k=block_k, interpret=interpret)
+    # merge the current token (self-attention term)
+    knb = (jnp.repeat(k_new, rep, axis=2) if rep > 1 else k_new)[:, 0]
+    vnb = (jnp.repeat(v_new, rep, axis=2) if rep > 1 else v_new)[:, 0]
+    s_self = jnp.einsum("bhd,bhd->bh", q[:, 0].astype(jnp.float32),
+                        knb.astype(jnp.float32))[..., None] * scale  # (B,H,1)
+    m_tot = jnp.maximum(m, s_self)
+    alpha = jnp.exp(m - m_tot)
+    e_self = jnp.exp(s_self - m_tot)
+    l_tot = l * alpha + e_self
+    acc_tot = acc * alpha + e_self * vnb.astype(jnp.float32)
+    out = acc_tot / l_tot
+    return out[:, None].astype(q.dtype)
+
+
+def lse_merge(parts):
+    """Merge [(acc, m, l), ...] partial results from seq-shards of the
+    cache — the distributed flash-decode combiner."""
+    accs, ms, ls = zip(*parts)
+    m_tot = jnp.max(jnp.stack(ms), axis=0)
+    l_tot = sum(l * jnp.exp(m - m_tot) for m, l in zip(ms, ls))
+    acc_tot = sum(a * jnp.exp(m - m_tot) for m, a in zip(ms, accs))
+    return acc_tot / l_tot

@@ -1,0 +1,16 @@
+"""Oracle for flash_decode: the XLA decode_attention path."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models.attention import KVCache, decode_attention
+
+
+def flash_decode_ref(q, k_cache, v_cache, k_new, v_new, *, scale: float):
+    """Same signature as ops.flash_decode (full-valid cache, no SWA)."""
+    H, d = q.shape[2], q.shape[3]
+    acfg = AttentionConfig(n_heads=H, n_kv_heads=k_cache.shape[2],
+                           head_dim=d, causal=True, softmax_scale=scale)
+    return decode_attention(q, KVCache(k_cache, v_cache), k_new, v_new,
+                            acfg, valid_len=jnp.asarray(k_cache.shape[1]))

@@ -1,0 +1,51 @@
+"""jit'd wrapper for the katana_bank kernel: canonical (N, n) layout in,
+lane-packed (n, N) SoA inside, padding N to the lane tile.
+
+``interpret=True`` everywhere in this container (CPU); on a real TPU
+pass interpret=False — the kernel and BlockSpecs are TPU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filters import FilterModel
+from repro.kernels.katana_bank.kernel import LANE_TILE, katana_bank_step
+
+
+def _pad_to(x, N_pad, axis=-1):
+    pad = N_pad - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "lane_tile", "symmetrize",
+                                    "interpret"))
+def katana_bank(model: FilterModel, x, P, z, lane_tile: int = LANE_TILE,
+                symmetrize: bool = True, interpret: bool = True):
+    """Fused batched KF step.
+
+    x: (N, n); P: (N, n, n); z: (N, m)  ->  (x', P') same shapes.
+    """
+    N = x.shape[0]
+    N_pad = -(-N // lane_tile) * lane_tile
+    # AoS -> SoA (lanes-minor): one transpose outside the kernel; inside,
+    # the whole recursion is lane-parallel.
+    xs = _pad_to(x.T, N_pad)
+    Ps = _pad_to(P.transpose(1, 2, 0), N_pad)
+    zs = _pad_to(z.T, N_pad)
+    x2, P2 = katana_bank_step(model, xs, Ps, zs, lane_tile=lane_tile,
+                              symmetrize=symmetrize, interpret=interpret)
+    return x2[:, :N].T, P2[:, :, :N].transpose(2, 0, 1)
+
+
+def katana_bank_soa(model: FilterModel, x, P, z, **kw):
+    """SoA entry point for callers that keep the lane layout end-to-end
+    (the serving engine's resident bank)."""
+    return katana_bank_step(model, x, P, z, **kw)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the katana_bank kernel: the batched_lanes rewrite
+(itself validated against the float64 numpy oracle in core/ref.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.filters import FilterModel
+from repro.core.rewrites import build_batched_lanes
+
+
+def katana_bank_ref(model: FilterModel, x, P, z, symmetrize: bool = True):
+    """x: (N, n); P: (N, n, n); z: (N, m) — canonical (AoS) layout."""
+    step, _ = build_batched_lanes(model, x.shape[0], dtype=x.dtype,
+                                  symmetrize=symmetrize)
+    return step(x, P, z)

@@ -1,0 +1,83 @@
+"""ssd_scan: chunked Mamba-2 SSD Pallas TPU kernel.
+
+KATANA's fused-recursion insight applied to the learned SSM (DESIGN.md
+§6): the running (P, N) state lives in VMEM scratch across the whole
+sequence sweep — the recurrence never round-trips HBM — while the
+intra-chunk work is dense (Q,Q)/(Q,P) MXU matmuls (the "duality" part
+of SSD). Grid (B, H, n_chunks), chunk innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, B_ref, C_ref, A_ref, y_ref, state_scr, *,
+            chunk: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)    # (Q,)
+    Bm = B_ref[0].astype(jnp.float32)        # (Q, N)
+    Cm = C_ref[0].astype(jnp.float32)        # (Q, N)
+    A = A_ref[0, 0]                          # scalar (this head)
+
+    l = dt * A                               # (Q,) log-decay <= 0
+    cum = jnp.cumsum(l)                      # inclusive
+    # inter-chunk: y_i += exp(cum_i) * C_i . state
+    state = state_scr[...]                   # (P, N)
+    y_inter = jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * jnp.exp(cum)[:, None]  # (Q,P)
+    # intra-chunk: W_ij = (C_i.B_j) exp(cum_i - cum_j) dt_j  (i >= j)
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q,Q)
+    D = jnp.exp(cum[:, None] - cum[None, :])
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    W = jnp.where(mask, G * D * dt[None, :], 0.0)
+    y_intra = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y_inter + y_intra).astype(y_ref.dtype)
+    # state carry: S' = exp(cum_Q) S + x^T (B * exp(cum_Q - cum) dt)
+    w_end = jnp.exp(cum[-1] - cum) * dt      # (Q,)
+    S_add = jax.lax.dot_general(
+        x, Bm * w_end[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (P, N)
+    state_scr[...] = state * jnp.exp(cum[-1]) + S_add
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_bhsp(x, dt, Bm, Cm, A, chunk: int = 256,
+                  interpret: bool = True):
+    """x: (B, H, S, P); dt: (B, H, S); Bm/Cm: (B, S, N); A: (H, 1).
+
+    Returns y: (B, H, S, P). S % chunk == 0."""
+    Bb, H, S, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    kern = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bm, Cm, A)

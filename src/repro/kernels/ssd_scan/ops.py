@@ -1,0 +1,24 @@
+"""jit'd wrapper for ssd_scan: models/ssm.py layout in, kernel layout
+inside."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_bhsp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, Bm, Cm, A, chunk: int = 256, interpret: bool = True):
+    """Drop-in for models.ssm.ssd_chunked's y output (state0=None).
+
+    x: (B, S, H, P); dt: (B, S, H) fp32 post-softplus; Bm/Cm: (B, S, N);
+    A: (H,) negative. Returns y (B, S, H, P).
+    """
+    xb = x.transpose(0, 2, 1, 3)           # (B, H, S, P)
+    dtb = dt.transpose(0, 2, 1)            # (B, H, S)
+    y = ssd_scan_bhsp(xb, dtb, Bm, Cm, A[:, None].astype(jnp.float32),
+                      chunk=chunk, interpret=interpret)
+    return y.transpose(0, 2, 1, 3)

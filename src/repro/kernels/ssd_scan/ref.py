@@ -1,0 +1,35 @@
+"""Oracles for ssd_scan: a naive sequential SSM recurrence (ground
+truth) and the chunked pure-jnp implementation from models/ssm.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked  # noqa: F401  (chunked oracle)
+
+
+def ssd_naive(x, dt, Bm, Cm, A, state0=None):
+    """Sequential scan, one step at a time (float32).
+
+    x: (B, S, H, P); dt: (B, S, H); Bm/Cm: (B, S, N); A: (H,) negative.
+    Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        a = jnp.exp(dt_t * A)  # (B,H)
+        xbar = dt_t[..., None] * x_t.astype(jnp.float32)
+        state = (state * a[..., None, None]
+                 + jnp.einsum("bhp,bn->bhpn", xbar,
+                              B_t.astype(jnp.float32)))
+        y = jnp.einsum("bn,bhpn->bhp", C_t.astype(jnp.float32), state)
+        return state, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1).astype(jnp.float32),
+          Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), state

@@ -1,0 +1,148 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs for every
+(arch x shape) cell — the dry-run contract (weak-type-correct,
+shardable, zero device allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import blocks
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.sharding.rules import ShardingContext, tree_shardings
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _frontend_len(cfg: ModelConfig, S: int) -> int:
+    if cfg.frontend == "audio":
+        return S
+    return cfg.frontend_positions if cfg.frontend else 0
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, run: RunConfig,
+                compute_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Input ShapeDtypeStructs for the cell's step function."""
+    B, S = shape.global_batch, shape.seq_len
+    nf = _frontend_len(cfg, S)
+    st = S - nf
+    if shape.kind == "train":
+        mb = run.microbatches
+        assert B % mb == 0, (B, mb)
+        bm = B // mb
+        batch = {}
+        if nf:
+            batch["embeds"] = _sds((mb, bm, nf, cfg.d_model), compute_dtype)
+        if st > 0:
+            batch["tokens"] = _sds((mb, bm, st), jnp.int32)
+        batch["labels"] = _sds((mb, bm, S), jnp.int32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if nf:
+            batch["embeds"] = _sds((B, nf, cfg.d_model), compute_dtype)
+        if st > 0:
+            batch["tokens"] = _sds((B, st), jnp.int32)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"token": _sds((B, 1), jnp.int32),
+            "cache_pos": _sds((), jnp.int32)}
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, run: RunConfig,
+                    ctx: ShardingContext) -> Dict[str, Any]:
+    mesh = ctx.mesh
+    B = shape.global_batch
+    dp = ctx.data_axes if B % max(ctx.data_size, 1) == 0 else ()
+    bspec = dp if dp else None
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    if shape.kind == "train":
+        out = {"labels": ns(None, bspec, None)}
+        specs = batch_specs(cfg, shape, run)
+        if "tokens" in specs:
+            out["tokens"] = ns(None, bspec, None)
+        if "embeds" in specs:
+            out["embeds"] = ns(None, bspec, None, None)
+        return out
+    if shape.kind == "prefill":
+        out = {}
+        specs = batch_specs(cfg, shape, run)
+        if "tokens" in specs:
+            out["tokens"] = ns(bspec, None)
+        if "embeds" in specs:
+            out["embeds"] = ns(bspec, None, None)
+        return out
+    return {"token": ns(bspec, None), "cache_pos": ns()}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Any:
+    """Abstract decode-cache pytree for the cell (cache len = seq_len)."""
+    return jax.eval_shape(
+        lambda: blocks.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                  dtype))
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                    ctx: ShardingContext) -> Any:
+    """KV caches: batch->data when divisible + seq->model (flash-decode
+    merge); for B=1 long-context the seq axis takes BOTH data and model
+    (fully context-parallel decode). SSM states: batch->data,
+    heads->model when divisible. Structure is built from the static
+    layer plan, mirroring blocks.init_cache exactly."""
+    from repro.models.attention import KVCache
+    from repro.models.ssm import SSMCache, ssm_dims
+
+    mesh = ctx.mesh
+    B = shape.global_batch
+    b_ok = B % max(ctx.data_size, 1) == 0
+    bspec = ctx.data_axes if b_ok else None
+    seq_axes = (ctx.model_axis,) if b_ok else ctx.data_axes + (ctx.model_axis,)
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    kv_sh = ns(None, bspec, seq_axes, None, None)  # (G,B,T,K,hd)
+    out = {}
+    for j, (mix, _) in enumerate(blocks.group_plan(cfg)):
+        if mix == "attn":
+            out[f"layer{j}"] = KVCache(kv_sh, kv_sh)
+        else:
+            _, H, _ = ssm_dims(cfg.ssm, cfg.d_model)
+            hspec = ctx.model_axis if H % ctx.model_size == 0 else None
+            out[f"layer{j}"] = SSMCache(
+                state=ns(None, bspec, hspec, None, None),
+                conv_x=ns(None, bspec, None, hspec, None),
+                conv_B=ns(None, bspec, None, None),
+                conv_C=ns(None, bspec, None, None),
+            )
+    return out
+
+
+def state_shardings(cfg: ModelConfig, run: RunConfig, ctx: ShardingContext):
+    """TrainState shardings: master/m/v/ef shard like the params."""
+    aparams = model_lib.abstract_params(cfg)
+    pspec = model_lib.param_spec(cfg)
+    psh = tree_shardings(pspec, aparams, ctx)
+    return adamw.TrainState(
+        step=NamedSharding(ctx.mesh, P()),
+        master=psh, m=psh, v=psh,
+        ef=psh if run.grad_compression else None,
+    )
+
+
+def param_shardings(cfg: ModelConfig, ctx: ShardingContext):
+    aparams = model_lib.abstract_params(cfg)
+    pspec = model_lib.param_spec(cfg)
+    return tree_shardings(pspec, aparams, ctx)

@@ -1,0 +1,103 @@
+"""Jittable step builders: train_step (microbatched grad accumulation,
+clipping, optional int8 EF compression, AdamW) and serve steps
+(prefill / decode). These are the functions the dry-run lowers and the
+launchers drive.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.distributed.compression import ef_compress
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.sharding.rules import ShardingContext
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig,
+                    ctx: Optional[ShardingContext] = None,
+                    compute_dtype=jnp.bfloat16):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leaves are shaped (microbatches, mb_batch, ...); gradients are
+    accumulated over a lax.scan so activation (and logits) memory is
+    bounded by one microbatch while XLA overlaps the per-microbatch
+    reduction with the next microbatch's compute.
+    """
+
+    def train_step(state: adamw.TrainState, batch: Dict[str, Any]):
+        params_c = adamw.compute_params(state, compute_dtype)
+        grad_fn = jax.value_and_grad(
+            lambda p, mb: model_lib.loss_fn(p, cfg, mb, ctx, run.remat),
+            has_aux=True)
+
+        def mb_body(acc, mb):
+            gsum, lsum = acc
+            (loss, metrics), g = grad_fn(params_c, mb)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + loss.astype(jnp.float32)), metrics
+
+        gzero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params_c)
+        (gsum, lsum), metrics = jax.lax.scan(
+            mb_body, (gzero, jnp.zeros((), jnp.float32)), batch)
+        nmb = run.microbatches
+        grads = jax.tree.map(lambda g: g / nmb, gsum)
+        grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
+        if run.grad_compression:
+            grads, new_ef = ef_compress(grads, state.ef)
+            state = state._replace(ef=new_ef)
+        lr = adamw.warmup_cosine(state.step, run.learning_rate,
+                                 run.warmup_steps, run.total_steps)
+        state = adamw.adamw_update(state, grads, lr,
+                                   weight_decay=run.weight_decay)
+        out_metrics = {
+            "loss": lsum / nmb,
+            "grad_norm": gnorm,
+            "lr": lr,
+            "ce": metrics["ce"].mean(),
+            "aux": metrics["aux"].mean(),
+        }
+        return state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: Optional[ShardingContext] = None):
+    def prefill_step(params, batch):
+        logits, caches, _ = model_lib.forward(params, cfg, batch, "prefill",
+                                              ctx)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: Optional[ShardingContext] = None):
+    def decode_step(params, batch, caches):
+        logits, new_caches, _ = model_lib.forward(params, cfg, batch,
+                                                  "decode", ctx, caches)
+        return logits, new_caches
+
+    return decode_step
+
+
+def make_encode_step(cfg: ModelConfig, ctx: Optional[ShardingContext] = None):
+    """Encoder-only archs (hubert): full-sequence logits, no cache."""
+
+    def encode_step(params, batch):
+        x, positions = model_lib._embed_inputs(params, cfg, batch, "prefill")
+        if ctx is not None:
+            x = ctx.constrain(x)
+        from repro.models import blocks, layers as L
+
+        x, _, _ = blocks.stack_apply(params["groups"], x, cfg, "train", ctx,
+                                     None, positions, None, remat="none")
+        x = L.apply_norm(params["final_norm"], x, cfg.norm)
+        return model_lib._head(params, cfg, x)
+
+    return encode_step

@@ -1,0 +1,322 @@
+"""Attention: GQA/MQA, sliding-window, chunked (memory-bounded) softmax,
+and KV-cache decode (including the seq-sharded flash-decode pattern —
+the cache is sharded over the sequence axis and GSPMD inserts the
+max/sum/weighted-output all-reduces, i.e. the distributed online-softmax
+merge).
+
+Layout rules (KATANA Opt-2 discipline): KV is broadcast to the full
+query-head count *before* the score einsum so every activation tensor
+carries a single `heads` axis that shards cleanly over the mesh `model`
+axis; caches are stored un-broadcast at ``n_kv_heads``.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttentionConfig
+from repro.models.layers import rope
+
+NEG_INF = -1e30
+
+
+def attn_init(key, acfg: AttentionConfig, d: int, dtype) -> Dict:
+    H, K, hd = acfg.n_heads, acfg.n_kv_heads, acfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    so = 1.0 / np.sqrt(H * hd)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, K, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, K, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H, hd, d)) * so).astype(dtype),
+    }
+    if acfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((K, hd), dtype)
+        p["bv"] = jnp.zeros((K, hd), dtype)
+    return p
+
+
+def attn_spec(acfg: AttentionConfig) -> Dict:
+    p = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv", None),
+        "wv": ("embed", "kv", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if acfg.qkv_bias:
+        p["bq"] = ("heads", None)
+        p["bk"] = ("kv", None)
+        p["bv"] = ("kv", None)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, T, K, hd) — roped keys
+    v: jnp.ndarray  # (B, T, K, hd)
+
+
+def _project_qkv(p: Dict, x: jnp.ndarray, acfg: AttentionConfig,
+                 positions: jnp.ndarray):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if acfg.use_rope:
+        q = rope(q, positions, acfg.rope_theta)
+        k = rope(k, positions, acfg.rope_theta)
+    return q, k, v
+
+
+def _broadcast_kv(t: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, T, K, hd) -> (B, T, H, hd) by repeating each kv head G times."""
+    K = t.shape[2]
+    if K == n_heads:
+        return t
+    return jnp.repeat(t, n_heads // K, axis=2)
+
+
+def _mask_bias(qpos, kpos, causal: bool, window: Optional[int], dtype):
+    """Additive bias (…, S_q, S_k) from absolute positions."""
+    ok = jnp.ones(qpos.shape[-1:] + kpos.shape[-1:], bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def full_attention(q, k, v, acfg: AttentionConfig, qpos, kpos):
+    """Masked softmax attention, full S_q x S_k score tensor.
+
+    q: (B, S, H, hd); k/v: (B, T, K, hd). Used for train-length
+    sequences and as the cost-probe reference; long sequences use
+    ``chunked_attention``.
+    """
+    H, hd = acfg.n_heads, acfg.head_dim
+    scale = acfg.softmax_scale or 1.0 / np.sqrt(hd)
+    kb = _broadcast_kv(k, H)
+    vb = _broadcast_kv(v, H)
+    scores = jnp.einsum("bshk,bthk->bhst", q, kb).astype(jnp.float32) * scale
+    scores = scores + _mask_bias(qpos, kpos, acfg.causal, acfg.sliding_window,
+                                 jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthk->bshk", probs, vb)
+
+
+def chunked_attention(q, k, v, acfg: AttentionConfig, qpos, kpos,
+                      q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Online-softmax attention, memory O(q_chunk x kv_chunk) — the pure
+    JAX mirror of the flash_attention Pallas kernel (kernels/flash_attention
+    is the TPU-native version; this is the shardable XLA fallback)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    scale = acfg.softmax_scale or 1.0 / np.sqrt(hd)
+    kb = _broadcast_kv(k, H)
+    vb = _broadcast_kv(v, H)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    nq, nk = S // q_chunk, T // kv_chunk
+    assert S % q_chunk == 0 and T % kv_chunk == 0, (S, T, q_chunk, kv_chunk)
+    qc = q.reshape(B, nq, q_chunk, H, hd)
+    kc = kb.reshape(B, nk, kv_chunk, H, hd)
+    vc = vb.reshape(B, nk, kv_chunk, H, hd)
+    qp = qpos.reshape(nq, q_chunk)
+    kp = kpos.reshape(nk, kv_chunk)
+
+    def q_block(qi, qpi):
+        # qi: (B, q_chunk, H, hd)
+        def kv_body(carry, inp):
+            m, l, acc = carry
+            ki, vi, kpi = inp
+            s = jnp.einsum("bqhk,bthk->bhqt", qi, ki).astype(jnp.float32) * scale
+            s = s + _mask_bias(qpi, kpi, acfg.causal, acfg.sliding_window,
+                               jnp.float32)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pe = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + pe.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqt,bthk->bhqk", pe.astype(qi.dtype), vi).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.swapaxes(1, 2).astype(q.dtype)  # (B, q_chunk, H, hd)
+
+    out = jax.lax.map(lambda args: q_block(*args),
+                      (qc.swapaxes(0, 1), qp))  # (nq, B, q_chunk, H, hd)
+    return out.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+def swa_attention(q, k, v, acfg: AttentionConfig, qpos, kpos,
+                  q_chunk: int = 1024):
+    """True banded sliding-window attention: each q chunk attends a
+    dynamically-sliced (window + q_chunk) KV band — S·W FLOPs, not S².
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    W = acfg.sliding_window
+    band = W + q_chunk
+    if T <= band:  # window covers everything: fall back
+        return full_attention(q, k, v, acfg, qpos, kpos)
+    scale = acfg.softmax_scale or 1.0 / np.sqrt(hd)
+    kb = _broadcast_kv(k, H)
+    vb = _broadcast_kv(v, H)
+    nq = S // q_chunk
+    qc = q.reshape(B, nq, q_chunk, H, hd)
+    qp = qpos.reshape(nq, q_chunk)
+
+    def q_block(i, qi, qpi):
+        start = jnp.clip(i * q_chunk + q_chunk - band, 0, T - band)
+        ki = jax.lax.dynamic_slice_in_dim(kb, start, band, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(vb, start, band, axis=1)
+        kpi = jax.lax.dynamic_slice_in_dim(kpos, start, band, axis=0)
+        s = jnp.einsum("bqhk,bthk->bhqt", qi, ki).astype(jnp.float32) * scale
+        s = s + _mask_bias(qpi, kpi, acfg.causal, W, jnp.float32)
+        probs = jax.nn.softmax(s, axis=-1).astype(qi.dtype)
+        o = jnp.einsum("bhqt,bthk->bqhk", probs, vi)
+        return o
+
+    out = jax.lax.map(
+        lambda args: q_block(*args),
+        (jnp.arange(nq), qc.swapaxes(0, 1), qp))
+    return out.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+def decode_attention(q, cache: KVCache, k_new, v_new, acfg: AttentionConfig,
+                     valid_len, ctx=None):
+    """One-token attention over a (possibly seq-sharded) KV cache.
+
+    q/k_new/v_new: (B, 1, H|K, hd); cache.k/v: (B, T, K, hd). The cache
+    stays sharded over sequence (explicitly constrained — without the
+    pins XLA's propagation prefers head sharding and replicates the
+    whole cache); the fp32 max / sum / weighted-output reductions are
+    then partitioned by GSPMD into the flash-decode all-reduce merge
+    (DESIGN.md §5).
+    """
+    B, T = cache.k.shape[0], cache.k.shape[1]
+    H, hd = acfg.n_heads, acfg.head_dim
+    scale = acfg.softmax_scale or 1.0 / np.sqrt(hd)
+
+    def pin(x, *spec):
+        if ctx is None or ctx.mesh is None:
+            return x
+        from jax.sharding import PartitionSpec as P
+        return ctx.constrain(x, P(*spec))
+
+    bspec, seq_axes = (None, None)
+    if ctx is not None and ctx.mesh is not None:
+        b_ok = B % ctx.data_size == 0
+        bspec = ctx.data_axes if b_ok else None
+        seq_axes = ((ctx.model_axis,) if b_ok
+                    else ctx.data_axes + (ctx.model_axis,))
+    kb = pin(_broadcast_kv(cache.k, H), bspec, seq_axes, None, None)
+    vb = pin(_broadcast_kv(cache.v, H), bspec, seq_axes, None, None)
+    s_cache = jnp.einsum("bqhk,bthk->bhqt", q, kb).astype(jnp.float32) * scale
+    s_cache = pin(s_cache, bspec, None, None, seq_axes)
+    idx = jnp.arange(T)
+    ok = idx[None, None, None, :] < valid_len
+    if acfg.sliding_window:
+        ok &= idx[None, None, None, :] >= (valid_len - acfg.sliding_window)
+    s_cache = jnp.where(ok, s_cache, NEG_INF)
+    s_self = jnp.einsum(
+        "bqhk,bqhk->bhq", q, _broadcast_kv(k_new, H)
+    ).astype(jnp.float32)[..., None] * scale                      # (B,H,1,1)
+    m = jnp.maximum(s_cache.max(axis=-1, keepdims=True), s_self)  # (B,H,1,1)
+    e_cache = jnp.exp(s_cache - m)                                # (B,H,1,T)
+    e_cache = pin(e_cache, bspec, None, None, seq_axes)
+    e_self = jnp.exp(s_self - m)                                  # (B,H,1,1)
+    denom = e_cache.sum(axis=-1, keepdims=True) + e_self
+    o_cache = jnp.einsum("bhqt,bthk->bhqk", e_cache.astype(q.dtype), vb,
+                         preferred_element_type=jnp.float32)
+    o_cache = pin(o_cache, bspec, None, None, None)
+    v_self = _broadcast_kv(v_new, H).transpose(0, 2, 1, 3)        # (B,H,1,hd)
+    out = (o_cache + e_self * v_self.astype(jnp.float32)) / denom
+    return out.astype(q.dtype).transpose(0, 2, 1, 3)              # (B,1,H,hd)
+
+
+def apply_attention(p: Dict, x: jnp.ndarray, acfg: AttentionConfig,
+                    positions: jnp.ndarray, mode: str,
+                    cache: Optional[KVCache] = None,
+                    cache_pos=None, impl: str = "auto",
+                    q_chunk: int = 1024,
+                    ctx=None) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Unified attention layer.
+
+    mode: "train" | "prefill" | "decode".
+      train:   returns (out, None)
+      prefill: returns (out, KVCache of the whole sequence — window-
+               truncated for SWA archs so the decode cache is bounded)
+      decode:  x is (B, 1, d); cache required; cache_pos: scalar ring
+               index to write the new KV at; returns (out, new cache)
+    impl: auto | full | chunked | swa (train/prefill only)
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, acfg, positions)
+    if mode in ("train", "prefill"):
+        if impl == "auto":
+            if acfg.sliding_window and S > 4 * (acfg.sliding_window + q_chunk):
+                impl = "swa"
+            elif S > 8192:
+                impl = "chunked"
+            else:
+                impl = "full"
+        if impl == "flash":
+            # Pallas fused kernel (kernels/flash_attention): scores never
+            # reach HBM. interpret=True on CPU; real kernel on TPU.
+            from repro.kernels.flash_attention.ops import flash_attention
+
+            scale = acfg.softmax_scale or 1.0 / np.sqrt(acfg.head_dim)
+            kb = _broadcast_kv(k, acfg.n_heads)
+            vb = _broadcast_kv(v, acfg.n_heads)
+            out = flash_attention(q, kb, vb, scale, acfg.causal,
+                                  acfg.sliding_window, min(512, S),
+                                  min(512, S), True)
+        else:
+            fn = {"full": full_attention, "chunked": chunked_attention,
+                  "swa": swa_attention}[impl]
+            out = (fn(q, k, v, acfg, positions, positions) if impl == "full"
+                   else fn(q, k, v, acfg, positions, positions,
+                           q_chunk=q_chunk))
+        new_cache = None
+        if mode == "prefill":
+            W = acfg.sliding_window
+            if W and S > W:
+                k_c = k[:, S - W:]
+                v_c = v[:, S - W:]
+            else:
+                k_c, v_c = k, v
+            new_cache = KVCache(k_c, v_c)
+    else:
+        assert cache is not None
+        out = decode_attention(q, cache, k, v, acfg,
+                               valid_len=jnp.asarray(cache.k.shape[1]),
+                               ctx=ctx)
+        wpos = cache_pos if cache_pos is not None else cache.k.shape[1] - 1
+        W = cache.k.shape[1]
+        slot = wpos % W if acfg.sliding_window else jnp.clip(wpos, 0, W - 1)
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+        if ctx is not None and ctx.mesh is not None:
+            from jax.sharding import PartitionSpec as P
+            B = x.shape[0]
+            b_ok = B % ctx.data_size == 0
+            bspec = ctx.data_axes if b_ok else None
+            seq_axes = ((ctx.model_axis,) if b_ok
+                        else ctx.data_axes + (ctx.model_axis,))
+            new_k = ctx.constrain(new_k, P(bspec, seq_axes, None, None))
+            new_v = ctx.constrain(new_v, P(bspec, seq_axes, None, None))
+        new_cache = KVCache(new_k, new_v)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache

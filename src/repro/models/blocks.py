@@ -1,0 +1,208 @@
+"""Block wiring: per-layer (mixer, ffn) composition and the
+scan-over-groups layer stack with configurable remat.
+
+The layer stack is grouped by the arch's interleave period (jamba: 8,
+MoE-every-2: 2, uniform: 1) so heterogeneous stacks scan over a
+homogeneous group pytree — compile time stays O(period), not O(depth).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import KVCache
+from repro.models.ssm import SSMCache
+
+
+def layer_plan(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    """[(mixer, ffn)] per layer: mixer in {attn, ssm}; ffn in {mlp, moe,
+    none}."""
+    kinds = cfg.layer_kinds()
+    moe_mask = cfg.moe_layer_mask()
+    plan = []
+    for i in range(cfg.n_layers):
+        mixer = kinds[i]
+        if cfg.family == "ssm":
+            ffn = "none"  # mamba2: the SSD block is the whole layer
+        elif moe_mask[i]:
+            ffn = "moe"
+        else:
+            ffn = "mlp" if cfg.d_ff else "none"
+        plan.append((mixer, ffn))
+    return plan
+
+
+def group_plan(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    p = cfg.interleave_period()
+    plan = layer_plan(cfg)
+    assert cfg.n_layers % p == 0, (cfg.name, cfg.n_layers, p)
+    for g in range(cfg.n_layers // p):
+        assert plan[g * p:(g + 1) * p] == plan[:p], "stack not periodic"
+    return plan[:p]
+
+
+def _layer_init(key, cfg: ModelConfig, mixer: str, ffn: str, dtype) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L._norm_init(cfg.d_model, cfg.norm, dtype)}
+    if mixer == "attn":
+        p["attn"] = attn_lib.attn_init(ks[0], cfg.attention, cfg.d_model, dtype)
+    else:
+        p["ssm"] = ssm_lib.ssm_init(ks[0], cfg.ssm, cfg.d_model, dtype)
+    if ffn != "none":
+        p["norm2"] = L._norm_init(cfg.d_model, cfg.norm, dtype)
+        if ffn == "mlp":
+            p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+        else:
+            p["moe"] = moe_lib.moe_init(ks[1], cfg.moe, cfg.d_model, cfg.act,
+                                        dtype)
+    return p
+
+
+def _layer_spec(cfg: ModelConfig, mixer: str, ffn: str) -> Dict:
+    p: Dict[str, Any] = {"norm1": L._norm_spec(cfg.norm)}
+    if mixer == "attn":
+        p["attn"] = attn_lib.attn_spec(cfg.attention)
+    else:
+        p["ssm"] = ssm_lib.ssm_spec()
+    if ffn != "none":
+        p["norm2"] = L._norm_spec(cfg.norm)
+        p["mlp" if ffn == "mlp" else "moe"] = (
+            L.mlp_spec(cfg.act) if ffn == "mlp" else moe_lib.moe_spec(cfg.act))
+    return p
+
+
+def group_init(key, cfg: ModelConfig, dtype) -> Dict:
+    plan = group_plan(cfg)
+    ks = jax.random.split(key, len(plan))
+    return {f"layer{j}": _layer_init(ks[j], cfg, mix, ffn, dtype)
+            for j, (mix, ffn) in enumerate(plan)}
+
+
+def group_spec(cfg: ModelConfig) -> Dict:
+    plan = group_plan(cfg)
+    # leading "layers" axis (the scan axis) prepended by stack_spec
+    return {f"layer{j}": _layer_spec(cfg, mix, ffn)
+            for j, (mix, ffn) in enumerate(plan)}
+
+
+def _empty_layer_cache(cfg: ModelConfig, mixer: str, B: int, cache_len: int,
+                       dtype):
+    if mixer == "attn":
+        a = cfg.attention
+        W = min(cache_len, a.sliding_window) if a.sliding_window else cache_len
+        shape = (B, W, a.n_kv_heads, a.head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    s = cfg.ssm
+    d_inner, H, Pd = ssm_lib.ssm_dims(s, cfg.d_model)
+    return SSMCache(
+        state=jnp.zeros((B, H, Pd, s.d_state), jnp.float32),
+        conv_x=jnp.zeros((B, s.conv_width - 1, H, Pd), dtype),
+        conv_B=jnp.zeros((B, s.conv_width - 1, s.d_state), dtype),
+        conv_C=jnp.zeros((B, s.conv_width - 1, s.d_state), dtype),
+    )
+
+
+def init_cache(cfg: ModelConfig, B: int, cache_len: int, dtype) -> Dict:
+    """Stacked (n_groups, ...) cache pytree for the decode scan."""
+    plan = group_plan(cfg)
+    n_groups = cfg.n_layers // len(plan)
+    one = {f"layer{j}": _empty_layer_cache(cfg, mix, B, cache_len, dtype)
+           for j, (mix, _) in enumerate(plan)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_groups,) + x.shape).copy(), one)
+
+
+def _layer_apply(p: Dict, x, cfg: ModelConfig, mixer: str, ffn: str,
+                 mode: str, ctx, cache, positions, cache_pos):
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    if mixer == "attn":
+        out, new_cache = attn_lib.apply_attention(
+            p["attn"], h, cfg.attention, positions, mode, cache, cache_pos,
+            impl=(ctx.attn_impl if ctx is not None else "auto"), ctx=ctx)
+    else:
+        out, new_cache = ssm_lib.apply_ssm(
+            p["ssm"], h, cfg.ssm, mode, cache,
+            unroll=bool(ctx is not None and ctx.probe_unroll))
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = L.apply_norm(p["norm2"], x, cfg.norm)
+        if ffn == "mlp":
+            out = L.apply_mlp(p["mlp"], h, cfg.act, ctx=ctx)
+        else:
+            cap_mode = "factor" if mode == "train" else "full"
+            out, aux = moe_lib.apply_moe(p["moe"], h, cfg.moe, cfg.act, ctx,
+                                         cap_mode)
+        x = x + out
+    return x, new_cache, aux
+
+
+def group_apply(pg: Dict, x, cfg: ModelConfig, mode: str, ctx,
+                cache_g: Optional[Dict], positions, cache_pos):
+    plan = group_plan(cfg)
+    new_cache: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+    for j, (mix, ffn) in enumerate(plan):
+        name = f"layer{j}"
+        c = cache_g.get(name) if cache_g is not None else None
+        x, nc, a = _layer_apply(pg[name], x, cfg, mix, ffn, mode, ctx, c,
+                                positions, cache_pos)
+        if nc is not None:
+            new_cache[name] = nc
+        aux = aux + a
+    return x, new_cache if new_cache else None, aux
+
+
+def stack_init(key, cfg: ModelConfig, dtype) -> Dict:
+    plan = group_plan(cfg)
+    n_groups = cfg.n_layers // len(plan)
+    keys = jax.random.split(key, n_groups)
+    return jax.vmap(lambda k: group_init(k, cfg, dtype))(keys)
+
+
+def stack_apply(groups: Dict, x, cfg: ModelConfig, mode: str, ctx,
+                caches: Optional[Dict], positions, cache_pos,
+                remat: str = "selective"):
+    """Scan the group stack. Returns (x, new caches | None, aux)."""
+    use_cache = mode in ("prefill", "decode")
+
+    def body(carry, inp):
+        x, aux = carry
+        pg, cg = inp
+        x, new_cg, a = group_apply(pg, x, cfg, mode, ctx, cg, positions,
+                                   cache_pos)
+        return (x, aux + a), new_cg
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "selective":
+        body = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    n_groups = jax.tree.leaves(groups)[0].shape[0]
+    xs = (groups, caches if use_cache else None)
+    if n_groups <= 2:
+        # Unrolled path: tiny stacks (and the roofline depth-extrapolation
+        # probes, which need cost_analysis to see every layer — scan
+        # bodies are costed once; see DESIGN.md §4).
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys = []
+        for g in range(n_groups):
+            inp = jax.tree.map(lambda t: t[g], xs)
+            carry, y = body(carry, inp)
+            ys.append(y)
+        (x, aux) = carry
+        new_caches = (jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+                      if use_cache and ys and ys[0] is not None else None)
+    else:
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, (new_caches if use_cache else None), aux

@@ -1,0 +1,33 @@
+"""Modality frontends (STUBS per the assignment): the vision/audio
+encoders are not part of the assigned backbone; ``input_specs()``
+supplies precomputed patch/frame embeddings. A learned projection +
+norm adapts them into the residual stream so the adapter still trains.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def frontend_init(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    return {
+        "proj": (jax.random.normal(key, (d, d)) / np.sqrt(d)).astype(dtype),
+        "norm": L._norm_init(d, cfg.norm, dtype),
+    }
+
+
+def frontend_spec(cfg: ModelConfig) -> Dict:
+    return {"proj": ("embed", None), "norm": L._norm_spec(cfg.norm)}
+
+
+def apply_frontend(p: Dict, embeds: jnp.ndarray, cfg: ModelConfig):
+    """embeds: (B, T_front, d) precomputed patch/frame features."""
+    h = L.apply_norm(p["norm"], embeds, cfg.norm)
+    return h @ p["proj"]

@@ -1,0 +1,139 @@
+"""Shared model layers: norms, embeddings, rotary positions, MLP variants.
+
+Params are plain dicts of jnp arrays. Every initializer has a matching
+``*_spec`` returning the same tree with logical-axis tuples, consumed by
+``repro.sharding.rules`` to build PartitionSpecs — the KATANA Opt-2
+discipline (every layout decided statically, no runtime reshapes).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis names (mapped to mesh axes by repro.sharding.rules):
+#   "vocab"   — vocabulary dim            -> model
+#   "embed"   — residual-stream dim       -> fsdp data axes (weights)
+#   "heads"   — attention head dim        -> model
+#   "kv"      — kv-head dim               -> model if divisible
+#   "mlp"     — FFN hidden dim            -> model
+#   "experts" — MoE expert dim            -> model (EP)
+#   "ssm"     — ssm inner-head dim        -> model if divisible
+#   null      — replicated
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def _norm_init(d: int, kind: str, dtype) -> Dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _norm_spec(kind: str) -> Dict:
+    p = {"scale": ("embed_noshard",)}
+    if kind == "layernorm":
+        p["bias"] = ("embed_noshard",)
+    return p
+
+
+def apply_norm(p: Dict, x: jnp.ndarray, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype, max_pos: int = 0) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tokens": (jax.random.normal(k1, (vocab, d)) * 0.02).astype(dtype)}
+    if max_pos:
+        p["positions"] = (jax.random.normal(k2, (max_pos, d)) * 0.02).astype(dtype)
+    return p
+
+
+def embed_spec(max_pos: int = 0) -> Dict:
+    p = {"tokens": ("vocab", "embed")}
+    if max_pos:
+        p["positions"] = (None, "embed")
+    return p
+
+
+def apply_embed(p: Dict, tokens: jnp.ndarray, positions=None):
+    x = jnp.take(p["tokens"], tokens, axis=0)
+    if "positions" in p and positions is not None:
+        x = x + jnp.take(p["positions"], positions, axis=0)
+    return x
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants: swiglu | squared_relu | gelu
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    scale_in = 1.0 / np.sqrt(d)
+    scale_out = 1.0 / np.sqrt(d_ff)
+    p = {
+        "w_in": (jax.random.normal(ks[0], (d, d_ff)) * scale_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[1], (d_ff, d)) * scale_out).astype(dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[2], (d, d_ff)) * scale_in).astype(dtype)
+    return p
+
+
+def mlp_spec(act: str) -> Dict:
+    p = {"w_in": ("embed", "mlp"), "w_out": ("mlp", "embed")}
+    if act == "swiglu":
+        p["w_gate"] = ("embed", "mlp")
+    return p
+
+
+def apply_mlp(p: Dict, x: jnp.ndarray, act: str, ctx=None) -> jnp.ndarray:
+    def pin_h(h):
+        # keep the FFN hidden sharded over `model`: without the pin,
+        # XLA's propagation may all-gather the (d, d_ff) weights for
+        # small-token matvecs (decode) instead of TP-sharding the GEMM.
+        if ctx is None or ctx.mesh is None:
+            return h
+        if h.shape[-1] % ctx.model_size != 0:
+            return h
+        from jax.sharding import PartitionSpec as P
+        b = ctx.data_axes if h.shape[0] % ctx.data_size == 0 else None
+        return ctx.constrain(h, P(b, None, ctx.model_axis))
+
+    h = pin_h(x @ p["w_in"])
+    if act == "swiglu":
+        h = jax.nn.silu(pin_h(x @ p["w_gate"])) * h
+    elif act == "squared_relu":
+        r = jax.nn.relu(h)
+        h = r * r
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise KeyError(act)
+    return h @ p["w_out"]

@@ -1,0 +1,141 @@
+"""The full model: embed -> grouped layer stack -> head, with train /
+prefill / decode entry points and the CE loss.
+
+Batch dict convention (built by ``repro.launch.specs.input_specs``):
+  tokens   (B, S_text) int32          — absent for pure-audio archs
+  embeds   (B, T_front, d)            — vlm/audio stub frontends only
+  labels   (B, S) int32               — train mode
+  token    (B, 1) int32               — decode mode
+  cache_pos () int32                  — decode write position
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, frontends
+from repro.models import layers as L
+from repro.sharding.rules import ShardingContext
+
+
+def needs_learned_pos(cfg: ModelConfig) -> bool:
+    a = cfg.attention
+    return bool(a and not a.use_rope and not cfg.family == "hybrid")
+
+
+MAX_LEARNED_POS = 32768
+
+
+def init_params(cfg: ModelConfig, key, dtype=None) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    max_pos = MAX_LEARNED_POS if needs_learned_pos(cfg) else 0
+    p: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model, dtype, max_pos),
+        "groups": blocks.stack_init(ks[1], cfg, dtype),
+        "final_norm": L._norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(ks[2], (cfg.d_model, cfg.vocab))
+                     / np.sqrt(cfg.d_model)).astype(dtype)
+    if cfg.frontend:
+        p["frontend"] = frontends.frontend_init(ks[3], cfg, dtype)
+    return p
+
+
+def param_spec(cfg: ModelConfig) -> Dict:
+    max_pos = MAX_LEARNED_POS if needs_learned_pos(cfg) else 0
+    gspec = blocks.group_spec(cfg)
+    # prepend the scanned "layers" axis (never sharded) to every leaf
+    gspec = jax.tree.map(
+        lambda axes: ("layers",) + axes, gspec,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+    p: Dict[str, Any] = {
+        "embed": L.embed_spec(max_pos),
+        "groups": gspec,
+        "final_norm": L._norm_spec(cfg.norm),
+    }
+    from repro.configs.base import ModelConfig as _MC  # noqa
+    if not cfg.tie_embeddings:
+        p["head"] = ("embed", "vocab")
+    if cfg.frontend:
+        p["frontend"] = frontends.frontend_spec(cfg)
+    return p
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """ShapeDtypeStruct tree — no allocation (dry-run path)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.key(0))
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict, mode: str,
+                  pos_offset=0):
+    """Returns (x (B,S,d), positions (S,))."""
+    parts = []
+    if "embeds" in batch:
+        fe = frontends.apply_frontend(params["frontend"], batch["embeds"], cfg)
+        parts.append(fe)
+    key = "token" if mode == "decode" else "tokens"
+    if key in batch:
+        parts.append(L.apply_embed(params["embed"], batch[key]))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S) + pos_offset
+    if "positions" in params["embed"]:
+        table = params["embed"]["positions"]
+        pos_emb = jnp.take(table, jnp.clip(positions, 0, table.shape[0] - 1),
+                           axis=0)
+        x = x + pos_emb
+    return x, positions
+
+
+def _head(params, cfg: ModelConfig, x):
+    w = params["embed"]["tokens"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", x, w)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict, mode: str,
+            ctx: Optional[ShardingContext] = None, caches=None,
+            remat: str = "selective"):
+    """Returns (logits, new_caches, aux). Decode: S==1 inputs."""
+    ctx = ctx or ShardingContext(None)
+    cache_pos = batch.get("cache_pos")
+    pos_offset = cache_pos if mode == "decode" else 0
+    x, positions = _embed_inputs(params, cfg, batch, mode, pos_offset)
+    x = ctx.constrain(x)
+    x, new_caches, aux = blocks.stack_apply(
+        params["groups"], x, cfg, mode, ctx, caches, positions, cache_pos,
+        remat=remat if mode == "train" else "none")
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    if mode in ("prefill", "decode"):
+        x = x[:, -1:]  # only the last position feeds sampling
+    logits = _head(params, cfg, x)
+    if ctx.mesh is not None:
+        bspec = (ctx.data_axes if logits.shape[0] % ctx.data_size == 0
+                 else None)
+        logits = ctx.constrain(
+            logits,
+            jax.sharding.PartitionSpec(bspec, None, ctx.model_axis))
+    return logits, new_caches, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict,
+            ctx: Optional[ShardingContext] = None, remat: str = "selective",
+            aux_weight: float = 1e-2, z_weight: float = 1e-4):
+    """Mean CE over all positions (+ MoE aux + z-loss). fp32 math."""
+    logits, _, aux = forward(params, cfg, batch, "train", ctx, remat=remat)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)  # (B, S)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - gold)
+    zl = jnp.mean(lse * lse)
+    total = ce + aux_weight * aux + z_weight * zl
+    return total, {"ce": ce, "aux": aux, "z": zl}

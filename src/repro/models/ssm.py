@@ -1,0 +1,218 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked scan for
+train/prefill, O(1)-state step for decode.
+
+The chunked-scan structure is KATANA's insight transplanted (DESIGN.md
+§6): a recursive estimator whose per-step algebra is restructured into
+dense batched GEMMs, with the running state carried across chunks —
+the ``ssd_scan`` Pallas kernel keeps that state VMEM-resident, this
+module is the shardable pure-JAX reference.
+
+Projections are stored unfused per stream (z/x/B/C/dt) so each shards
+independently: heads on `model` (logical axis "ssm") when divisible,
+B/C/dt replicated. The gated output norm is per-head (shard-local).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SSMConfig
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray   # (B, H, P, N) running SSM state
+    conv_x: jnp.ndarray  # (B, w-1, H, P) conv tail for x
+    conv_B: jnp.ndarray  # (B, w-1, N)
+    conv_C: jnp.ndarray  # (B, w-1, N)
+
+
+def ssm_dims(cfg: SSMConfig, d: int) -> Tuple[int, int, int]:
+    d_inner = cfg.expand * d
+    H = d_inner // cfg.head_dim
+    return d_inner, H, cfg.head_dim
+
+
+def ssm_init(key, cfg: SSMConfig, d: int, dtype) -> Dict:
+    d_inner, H, Pd = ssm_dims(cfg, d)
+    N, w = cfg.d_state, cfg.conv_width
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d)
+    dt = jnp.exp(jax.random.uniform(ks[6], (H,),
+                 minval=np.log(1e-3), maxval=np.log(1e-1)))
+    return {
+        "wz": (jax.random.normal(ks[0], (d, H, Pd)) * s).astype(dtype),
+        "wx": (jax.random.normal(ks[1], (d, H, Pd)) * s).astype(dtype),
+        "wB": (jax.random.normal(ks[2], (d, N)) * s).astype(dtype),
+        "wC": (jax.random.normal(ks[3], (d, N)) * s).astype(dtype),
+        "wdt": (jax.random.normal(ks[4], (d, H)) * s).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (w, H, Pd)) * 0.1).astype(dtype),
+        "conv_B": (jax.random.normal(ks[5], (w, N)) * 0.1).astype(dtype),
+        "conv_C": (jax.random.normal(ks[5], (w, N)) * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": (jnp.log(jnp.expm1(dt))).astype(jnp.float32),
+        "norm_scale": jnp.ones((H, Pd), dtype),
+        "w_out": (jax.random.normal(ks[7], (H, Pd, d)) /
+                  np.sqrt(d_inner)).astype(dtype),
+    }
+
+
+def ssm_spec() -> Dict:
+    return {
+        "wz": ("embed", "ssm", None),
+        "wx": ("embed", "ssm", None),
+        "wB": ("embed", None),
+        "wC": ("embed", None),
+        "wdt": ("embed", "ssm_noshard"),
+        "conv_x": (None, "ssm", None),
+        "conv_B": (None, None),
+        "conv_C": (None, None),
+        "A_log": ("ssm_noshard",),
+        "D": ("ssm_noshard",),
+        "dt_bias": ("ssm_noshard",),
+        "norm_scale": ("ssm", None),
+        "w_out": ("ssm", None, "embed"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, tail: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv via shifted adds (width is small/static).
+
+    x: (B, S, ...); w: (width, ...) broadcasting over trailing dims.
+    tail: (B, width-1, ...) previous context (decode/chunk continuation).
+    """
+    width = w.shape[0]
+    if tail is None:
+        pad = [(0, 0)] * x.ndim
+        pad[1] = (width - 1, 0)
+        xp = jnp.pad(x, pad)
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    out = sum(xp[:, i:i + S] * w[i] for i in range(width))
+    return out
+
+
+def _per_head_norm(y: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    """Grouped RMSNorm over the head dim P (shard-local)."""
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def ssd_chunked(x, dt, Bm, Cm, A, chunk: int, state0=None,
+                unroll: bool = False):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P) fp-any; dt: (B, S, H) fp32 (post-softplus);
+    Bm/Cm: (B, S, N); A: (H,) fp32 negative; state0: (B, H, P, N) or None.
+    Returns (y (B, S, H, P), final state (B, H, P, N)).
+    """
+    Bb, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    xc = x.reshape(Bb, nc, Q, H, Pd)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = Bm.reshape(Bb, nc, Q, N)
+    Cc = Cm.reshape(Bb, nc, Q, N)
+
+    if state0 is None:
+        state0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+
+    def chunk_body(S_prev, inp):
+        x_c, dt_c, B_c, C_c = inp  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        l = dt_c * A  # (B,Q,H) log-decay, <= 0
+        cum = jnp.cumsum(l, axis=1)  # inclusive
+        # inter-chunk: contribution of the carried state
+        ydec = jnp.exp(cum)  # (B,Q,H)
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", C_c, S_prev) * ydec[..., None]
+        # intra-chunk: masked decay-weighted (C_i . B_j) x_j dt_j
+        G = jnp.einsum("bin,bjn->bij", C_c.astype(jnp.float32),
+                       B_c.astype(jnp.float32))  # (B,Q,Q)
+        D_ij = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Q,H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        W = jnp.where(mask[None, :, :, None], G[..., None] * D_ij, 0.0)
+        W = W * dt_c[:, None, :, :]  # weight by dt_j
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W.astype(x_c.dtype), x_c)
+        # state carry to next chunk
+        w_end = jnp.exp(cum[:, -1:, :] - cum) * dt_c  # (B,Q,H)
+        S_add = jnp.einsum("bqh,bqhp,bqn->bhpn", w_end.astype(jnp.float32),
+                           x_c.astype(jnp.float32), B_c.astype(jnp.float32))
+        S_new = S_prev * jnp.exp(cum[:, -1, :])[..., None, None] + S_add
+        y = y_inter.astype(x_c.dtype) + y_intra
+        return S_new, y
+
+    xs = (xc.swapaxes(0, 1), dtc.swapaxes(0, 1), Bc.swapaxes(0, 1),
+          Cc.swapaxes(0, 1))
+    # unroll=True: cost probes — lax.scan bodies are costed once by
+    # cost_analysis, so the roofline probes unroll the chunk loop.
+    # Capped at 32 chunks: beyond that the trace blows up compile time
+    # and the residual undercount is the SSD share of the remaining
+    # chunks (~2% of layer FLOPs for jamba, ~15% for mamba2-130m at
+    # 32k — noted in EXPERIMENTS.md §Roofline).
+    S_fin, ys = jax.lax.scan(chunk_body, state0, xs,
+                             unroll=min(nc, 32) if unroll else 1)
+    y = ys.swapaxes(0, 1).reshape(Bb, S, H, Pd)
+    return y, S_fin
+
+
+def apply_ssm(p: Dict, x: jnp.ndarray, cfg: SSMConfig, mode: str,
+              cache: Optional[SSMCache] = None, unroll: bool = False
+              ) -> Tuple[jnp.ndarray, Optional[SSMCache]]:
+    """x: (B, S, d). mode: train | prefill | decode (S=1)."""
+    B, S, d = x.shape
+    d_inner, H, Pd = ssm_dims(cfg, d)
+    N, w = cfg.d_state, cfg.conv_width
+    z = jnp.einsum("bsd,dhp->bshp", x, p["wz"])
+    xs = jnp.einsum("bsd,dhp->bshp", x, p["wx"])
+    Bm = x @ p["wB"]  # (B,S,N)
+    Cm = x @ p["wC"]
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        xs_c = _causal_conv(xs, p["conv_x"], cache.conv_x)
+        Bm_c = _causal_conv(Bm, p["conv_B"], cache.conv_B)
+        Cm_c = _causal_conv(Cm, p["conv_C"], cache.conv_C)
+        xs_c, Bm_c, Cm_c = map(jax.nn.silu, (xs_c, Bm_c, Cm_c))
+        a = jnp.exp(dt[:, 0] * A)  # (B,H)
+        xbar = (dt[:, 0, :, None] * xs_c[:, 0].astype(jnp.float32))  # (B,H,P)
+        S_new = (cache.state * a[..., None, None] +
+                 jnp.einsum("bhp,bn->bhpn", xbar,
+                            Bm_c[:, 0].astype(jnp.float32)))
+        y = jnp.einsum("bn,bhpn->bhp", Cm_c[:, 0].astype(jnp.float32), S_new)
+        y = y + p["D"][:, None] * xs_c[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)  # (B,1,H,P)
+        new_cache = SSMCache(
+            state=S_new,
+            conv_x=jnp.concatenate([cache.conv_x[:, 1:], xs], axis=1),
+            conv_B=jnp.concatenate([cache.conv_B[:, 1:], Bm], axis=1),
+            conv_C=jnp.concatenate([cache.conv_C[:, 1:], Cm], axis=1),
+        )
+    else:
+        xs_c = jax.nn.silu(_causal_conv(xs, p["conv_x"]))
+        Bm_c = jax.nn.silu(_causal_conv(Bm, p["conv_B"]))
+        Cm_c = jax.nn.silu(_causal_conv(Cm, p["conv_C"]))
+        y, S_fin = ssd_chunked(xs_c, dt, Bm_c, Cm_c, A, cfg.chunk,
+                               unroll=unroll)
+        y = y + (p["D"][:, None] * xs_c.astype(jnp.float32)).astype(y.dtype)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = SSMCache(
+                state=S_fin,
+                conv_x=xs[:, S - (w - 1):],
+                conv_B=Bm[:, S - (w - 1):],
+                conv_C=Cm[:, S - (w - 1):],
+            )
+    y = _per_head_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       p["norm_scale"])
+    out = jnp.einsum("bshp,hpd->bsd", y.astype(x.dtype), p["w_out"])
+    return out, new_cache

@@ -1,0 +1,86 @@
+"""AdamW with fp32 master weights, global-norm clipping, and optional
+int8 error-feedback gradient compression (distributed/compression.py).
+
+TrainState is a plain pytree; every leaf inherits the parameter's
+sharding (master/m/v shard identically to the param), so optimizer
+memory scales down with FSDP exactly like the weights do.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray        # () int32
+    master: Any              # fp32 param pytree (source of truth)
+    m: Any                   # fp32 first moment
+    v: Any                   # fp32 second moment
+    ef: Optional[Any] = None  # error-feedback residual (compression)
+
+
+def init_train_state(params, compression: bool = False) -> TrainState:
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = lambda: jax.tree.map(jnp.zeros_like, master)  # noqa: E731
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        master=master, m=zeros(), v=zeros(),
+        ef=zeros() if compression else None,
+    )
+
+
+def abstract_train_state(abstract_params, compression: bool = False):
+    return jax.eval_shape(
+        lambda p: init_train_state(p, compression), abstract_params)
+
+
+def compute_params(state: TrainState, dtype) -> Any:
+    """bf16 compute view of the master weights."""
+    return jax.tree.map(lambda p: p.astype(dtype), state.master)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+    cos = base_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(state: TrainState, grads, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1) -> TrainState:
+    """grads: fp32 pytree matching master."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+        return p, m, v
+
+    out = jax.tree.map(upd, state.master, grads, state.m, state.v)
+    master = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return state._replace(step=step, master=master, m=m, v=v)

@@ -1,0 +1,147 @@
+"""Optimized-HLO census: collective ops (+ bytes) and op-category counts.
+
+Works on ``compiled.as_text()`` (post-SPMD, per-device program). Bytes
+are computed from the RESULT shape printed on each op line; per-kind
+operand/wire bytes are derived using the participant count parsed from
+``replica_groups`` (both explicit ``{{0,1,..}}`` and iota
+``[g,s]<=[n]`` formats).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %all-reduce.5 = f32[8,128]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=[total]
+    return 1
+
+
+def collective_census(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: count, result_bytes, operand_bytes,
+    wire_bytes (ring estimate, per device)."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: dict(count=0, result_bytes=0.0, operand_bytes=0.0,
+                     wire_bytes=0.0))
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_body, dtype, dims, kind, startdone = m.groups()
+        if startdone == "-done":
+            continue  # counted at -start
+        if tuple_body is not None:
+            rb = sum(_shape_bytes(t, d)
+                     for t, d in _TUPLE_ELEM_RE.findall(tuple_body))
+        else:
+            rb = _shape_bytes(dtype, dims)
+        g = max(2, _group_size(line))
+        if kind == "all-gather":
+            operand = rb / g
+            wire = rb * (g - 1) / g
+        elif kind == "all-reduce":
+            operand = rb
+            wire = 2.0 * rb * (g - 1) / g
+        elif kind == "reduce-scatter":
+            operand = rb * g
+            wire = rb * (g - 1)
+        elif kind == "all-to-all":
+            operand = rb
+            wire = rb * (g - 1) / g
+        else:  # collective-permute
+            operand = rb
+            wire = rb
+        d = out[kind]
+        d["count"] += 1
+        d["result_bytes"] += rb
+        d["operand_bytes"] += operand
+        d["wire_bytes"] += wire
+        # bf16-equivalent wire: XLA:CPU legalizes bf16 dots to f32 and
+        # the f32 creeps into the adjacent collectives; the TPU backend
+        # keeps them bf16. f32 payloads count at half weight here.
+        is_f32 = (tuple_body or "").startswith("f32") or dtype == "f32"
+        d["wire_bytes_bf16eq"] = d.get("wire_bytes_bf16eq", 0.0) + (
+            wire * 0.5 if is_f32 else wire)
+    return dict(out)
+
+
+def op_census(hlo_text: str, ops=("transpose", "reshape", "gather",
+                                  "subtract", "dot", "add", "scatter")
+              ) -> Dict[str, int]:
+    """Count HLO op kinds (the paper's Fig. 3/4 graph census)."""
+    counts = dict.fromkeys(ops, 0)
+    pat = re.compile(r"=\s+(?:\([^)]*\)|\w+\[[^\]]*\][^ ]*)\s+([\w-]+)\(")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if m:
+            name = m.group(1)
+            if name in counts:
+                counts[name] += 1
+    return counts
+
+
+_CONVERT_RE = re.compile(
+    r"%\S+ = f32\[([\d,]+)\][^ ]* convert\(")
+
+
+def cpu_upcast_bytes(hlo_text: str, min_bytes: float = 64e6) -> float:
+    """Estimate of XLA:CPU's bf16->f32 dot-operand legalization temps.
+
+    The CPU backend upcasts bf16 GEMM operands to f32 and hoists the
+    converts; TPU executes bf16 natively, so these buffers don't exist
+    on the target. Sums f32 convert results above the threshold
+    (weights/activations feeding dots). Used to report corrected
+    per-device temp residency next to the raw number.
+    """
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _CONVERT_RE.search(line)
+        if m:
+            n = 1
+            for d in m.group(1).split(","):
+                n *= int(d)
+            b = n * 4
+            if b >= min_bytes:
+                total += b
+    return total
+
+
+def totals(census: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    t = dict(count=0, result_bytes=0.0, operand_bytes=0.0, wire_bytes=0.0,
+             wire_bytes_bf16eq=0.0)
+    for d in census.values():
+        for k in t:
+            t[k] += d.get(k, 0.0)
+    return t

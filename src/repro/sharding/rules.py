@@ -1,0 +1,146 @@
+"""Logical-axis sharding rules: one table maps every logical parameter /
+activation axis to mesh axes, for any mesh with ('data','model') or
+('pod','data','model') axes. GSPMD-style 2-D weight sharding: TP over
+`model`, FSDP over the data axes (toggle via RunConfig.fsdp).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingContext:
+    mesh: Optional[Mesh]
+    data_axes: Tuple[str, ...] = ("data",)   # DP/FSDP axes ('pod','data')
+    model_axis: str = "model"
+    fsdp: bool = True
+    # attention lowering for train/prefill: auto | full | chunked | swa
+    # | flash (Pallas kernel)
+    attn_impl: str = "auto"
+    # cost-probe mode: unroll inner scans (SSD chunks) so cost_analysis
+    # sees every iteration (DESIGN.md §4)
+    probe_unroll: bool = False
+    # MoE weight strategy: "gather" = FSDP over data axes, gathered
+    # per layer (train default — amortized over many tokens);
+    # "tp2d" = expert dim over `model` x FFN dim over the data axes —
+    # zero weight movement, activation-sized psums instead (decode
+    # hillclimb; see EXPERIMENTS.md §Perf).
+    moe_weight_mode: str = "gather"
+
+    @property
+    def data_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.model_axis])
+
+    def batch_spec(self, rank: int) -> P:
+        """Activations: batch on the data axes, rest replicated."""
+        return P(self.data_axes, *([None] * (rank - 1)))
+
+    def constrain(self, x, spec: Optional[P] = None):
+        """with_sharding_constraint with a concrete NamedSharding (no
+        dependence on an ambient mesh context). Batch dims that don't
+        divide the data axes degrade to replication."""
+        if self.mesh is None:
+            return x
+        if spec is None:
+            parts = [self.data_axes if x.shape[0] % self.data_size == 0
+                     else None] + [None] * (x.ndim - 1)
+            spec = P(*parts)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def make_context(mesh: Optional[Mesh], fsdp: bool = True,
+                 attn_impl: str = "auto",
+                 moe_weight_mode: str = "gather") -> ShardingContext:
+    if mesh is None:
+        return ShardingContext(None, attn_impl=attn_impl,
+                               moe_weight_mode=moe_weight_mode)
+    names = mesh.axis_names
+    data_axes = tuple(a for a in names if a in ("pod", "data"))
+    return ShardingContext(mesh, data_axes, "model", fsdp, attn_impl,
+                           moe_weight_mode=moe_weight_mode)
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], shape: Tuple[int, ...],
+                    ctx: ShardingContext) -> P:
+    """Map logical axis names to a PartitionSpec for this mesh.
+
+    Rules:
+      vocab / heads / mlp / experts / ssm -> 'model' (if divisible)
+      kv        -> 'model' if n_kv divisible by model size, else replicate
+      embed     -> FSDP over data axes (if enabled and divisible)
+      embed_noshard / None -> replicated
+    Divisibility is checked against the actual dim so awkward configs
+    (MQA kv=1, 24 ssm heads on a 16-way axis) degrade to replication
+    instead of erroring — recorded per-param by ``describe_spec``.
+    """
+    if ctx.mesh is None:
+        return P()
+    out = []
+    fsdp_used = False
+    for name, dim in zip(axes, shape):
+        if name in ("vocab", "heads", "mlp", "experts", "ssm"):
+            ms = ctx.model_size
+            out.append(ctx.model_axis if _divides(dim, ms) else None)
+        elif name == "kv":
+            ms = ctx.model_size
+            out.append(ctx.model_axis if _divides(dim, ms) else None)
+        elif name == "embed" and ctx.fsdp and not fsdp_used:
+            ds = ctx.data_size
+            if _divides(dim, ds):
+                out.append(ctx.data_axes)
+                fsdp_used = True
+            else:
+                out.append(None)
+        elif name == "moe_d":
+            ds = ctx.data_size
+            if (ctx.moe_weight_mode == "gather" and ctx.fsdp
+                    and not fsdp_used and _divides(dim, ds)):
+                out.append(ctx.data_axes)
+                fsdp_used = True
+            else:
+                out.append(None)
+        elif name == "moe_f":
+            ds = ctx.data_size
+            if ctx.moe_weight_mode == "tp2d" and _divides(dim, ds):
+                out.append(ctx.data_axes)
+            else:
+                out.append(None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def tree_specs(param_axes, params_shape, ctx: ShardingContext):
+    """Map a tree of logical-axes tuples + matching ShapeDtypeStruct tree
+    to a tree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes, arr: logical_to_spec(axes, arr.shape, ctx),
+        param_axes, params_shape,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def tree_shardings(param_axes, params_shape, ctx: ShardingContext):
+    specs = tree_specs(param_axes, params_shape, ctx)
+    if ctx.mesh is None:
+        return specs
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs)

@@ -1,0 +1,64 @@
+"""All attention lowerings (full / chunked / swa / flash kernel) are the
+same function; decode against a prefix-built cache matches full
+attention on the extended sequence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttentionConfig
+from repro.models import attention as A
+
+
+def _setup(S=128, B=2, H=4, K=2, hd=16, window=None, causal=True, seed=0):
+    acfg = AttentionConfig(n_heads=H, n_kv_heads=K, head_dim=hd,
+                           causal=causal, sliding_window=window)
+    d = 32
+    key = jax.random.key(seed)
+    p = A.attn_init(key, acfg, d, jnp.float32)
+    x = jax.random.normal(jax.random.key(seed + 1), (B, S, d), jnp.float32)
+    pos = jnp.arange(S)
+    return acfg, p, x, pos
+
+
+@pytest.mark.parametrize("impl", ["chunked", "flash"])
+@pytest.mark.parametrize("window", [None, 32])
+def test_impls_match_full(impl, window):
+    acfg, p, x, pos = _setup(window=window)
+    out_full, _ = A.apply_attention(p, x, acfg, pos, "train", impl="full")
+    out_other, _ = A.apply_attention(p, x, acfg, pos, "train", impl=impl,
+                                     q_chunk=32)
+    np.testing.assert_allclose(np.asarray(out_other), np.asarray(out_full),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_swa_banded_matches_full():
+    acfg, p, x, pos = _setup(S=256, window=32)
+    out_full, _ = A.apply_attention(p, x, acfg, pos, "train", impl="full")
+    out_swa, _ = A.apply_attention(p, x, acfg, pos, "train", impl="swa",
+                                   q_chunk=32)
+    np.testing.assert_allclose(np.asarray(out_swa), np.asarray(out_full),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_decode_matches_full_attention():
+    """prefill S tokens -> decode token S: logits column == full
+    attention over S+1 tokens at the last position."""
+    acfg, p, x, pos = _setup(S=64)
+    B, S, d = x.shape
+    x_next = jax.random.normal(jax.random.key(9), (B, 1, d), jnp.float32)
+    # full attention over the extended sequence
+    x_ext = jnp.concatenate([x, x_next], axis=1)
+    out_ext, _ = A.apply_attention(p, x_ext, acfg, jnp.arange(S + 1),
+                                   "train", impl="full")
+    want = out_ext[:, -1:]
+    # prefill + decode path
+    _, cache = A.apply_attention(p, x, acfg, pos, "prefill", impl="full")
+    got, new_cache = A.apply_attention(
+        p, x_next, acfg, jnp.asarray([S]), "decode", cache=cache,
+        cache_pos=jnp.asarray(S - 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-4)
+    assert new_cache.k.shape == cache.k.shape  # ring buffer, no growth

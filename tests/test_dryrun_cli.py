@@ -1,0 +1,27 @@
+"""Deliverable (e) in CI: the real dry-run CLI runs in a subprocess
+(with the 512-device XLA flag set by the script itself) and must
+lower+compile a production-mesh cell end to end."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_dryrun_cli_single_cell(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-130m", "--shape", "long_500k",
+         "--mesh", "multi", "--no-probes", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rec = json.loads(
+        (tmp_path / "multi" / "mamba2-130m" / "long_500k.json").read_text())
+    assert rec["supported"]
+    assert rec["full"]["arg_bytes_dev"] > 0
+    assert rec["full"]["compile_s"] > 0

@@ -1,0 +1,69 @@
+"""Filter-model construction + float64 oracle sanity."""
+import numpy as np
+import pytest
+
+from repro.core import ref
+from repro.core.filters import get_filter, make_ctra_ekf, make_cv_lkf
+from repro.data.trajectories import single_target
+
+
+@pytest.mark.parametrize("kind,n,m", [("lkf", 6, 3), ("ekf", 8, 4)])
+def test_dims_match_paper(kind, n, m):
+    model = get_filter(kind)
+    assert model.n == n and model.m == m  # paper §V workload dims
+    assert model.F.shape == (n, n)
+    assert model.H.shape == (m, n)
+    assert model.Q.shape == (n, n)
+    assert model.R.shape == (m, m)
+
+
+def test_lkf_cv_structure():
+    model = make_cv_lkf(dt=0.1)
+    np.testing.assert_allclose(model.F[:3, 3:], 0.1 * np.eye(3))
+    np.testing.assert_allclose(model.H[:, :3], np.eye(3))
+
+
+def test_ekf_jacobian_matches_fd():
+    """Analytic Jacobian == finite differences of f (numpy mirror)."""
+    model = make_ctra_ekf(dt=0.05)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        x = rng.normal(size=model.n)
+        J = model.F_jac_np(x)
+        eps = 1e-6
+        fd = np.zeros_like(J)
+        for j in range(model.n):
+            dx = np.zeros(model.n)
+            dx[j] = eps
+            fd[:, j] = (model.f_np(x + dx) - model.f_np(x - dx)) / (2 * eps)
+        np.testing.assert_allclose(J, fd, atol=1e-6)
+
+
+def test_ekf_jnp_matches_np():
+    import jax.numpy as jnp
+
+    model = make_ctra_ekf()
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(4, model.n)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(model.f(jnp.asarray(x))),
+        np.stack([model.f_np(xi) for xi in x]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(model.jacobian(jnp.asarray(x))),
+        np.stack([model.F_jac_np(xi) for xi in x]), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+def test_oracle_reduces_error(kind):
+    """The oracle filter beats raw measurements on its own dynamics."""
+    model = get_filter(kind)
+    truth, zs = single_target(model, 300, seed=3)
+    est, covs = ref.run(model, zs)
+    pos = slice(0, 3)
+    rmse_meas = np.sqrt(np.mean((zs[:, :3] - truth[:, pos]) ** 2))
+    rmse_filt = np.sqrt(np.mean((est[100:, pos] - truth[100:, pos]) ** 2))
+    assert rmse_filt < rmse_meas
+    # covariance stays symmetric PSD
+    for P in covs[::50]:
+        np.testing.assert_allclose(P, P.T, atol=1e-12)
+        assert np.linalg.eigvalsh(P).min() > -1e-10

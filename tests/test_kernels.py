@@ -1,0 +1,195 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps +
+hypothesis randomization against the pure-jnp/numpy oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.filters import get_filter
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.ops import flash_decode, lse_merge
+from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.katana_bank.ops import katana_bank
+from repro.kernels.katana_bank.ref import katana_bank_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_naive
+from repro.models.ssm import ssd_chunked
+
+
+# ---------------------------------------------------------------- katana
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+@pytest.mark.parametrize("N", [1, 7, 200, 300])
+def test_katana_bank_matches_ref(kind, N):
+    model = get_filter(kind)
+    rng = np.random.default_rng(N)
+    x = jnp.asarray(rng.normal(size=(N, model.n)), jnp.float32)
+    A = rng.normal(size=(N, model.n, model.n)) * 0.3
+    P = jnp.asarray(A @ A.transpose(0, 2, 1) + np.eye(model.n), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(N, model.m)), jnp.float32)
+    xk, Pk = katana_bank(model, x, P, z, lane_tile=128)
+    xr, Pr = katana_bank_ref(model, x, P, z)
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xr),
+                               atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(Pk), np.asarray(Pr),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_katana_bank_tracks_oracle_over_time():
+    """Iterated kernel steps track the float64 oracle (no drift)."""
+    from repro.core import ref as oref
+
+    model = get_filter("lkf")
+    rng = np.random.default_rng(0)
+    N, T = 64, 40
+    x = jnp.asarray(np.tile(model.x0, (N, 1)), jnp.float32)
+    P = jnp.asarray(np.tile(model.P0, (N, 1, 1)), jnp.float32)
+    zs = rng.normal(size=(T, N, model.m)) * 0.5
+    want, _, _ = oref.run_batched(model, zs, np.asarray(x), np.asarray(P))
+    for t in range(T):
+        x, P = katana_bank(model, x, P, jnp.asarray(zs[t], jnp.float32),
+                           lane_tile=128)
+    np.testing.assert_allclose(np.asarray(x), want[-1], atol=5e-4, rtol=5e-4)
+
+
+@given(st.integers(1, 400), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_katana_bank_hypothesis(N, seed):
+    model = get_filter("ekf")
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(N, model.n)), jnp.float32)
+    A = rng.normal(size=(N, model.n, model.n)) * 0.2
+    P = jnp.asarray(A @ A.transpose(0, 2, 1) + np.eye(model.n), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(N, model.m)), jnp.float32)
+    xk, Pk = katana_bank(model, x, P, z, lane_tile=128)
+    xr, Pr = katana_bank_ref(model, x, P, z)
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xr),
+                               atol=5e-5, rtol=5e-4)
+
+
+# ------------------------------------------------------------ flash attn
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 32)])
+@pytest.mark.parametrize("S,d,bq,bk", [(128, 32, 32, 32), (256, 64, 64, 128)])
+def test_flash_attention_sweep(dtype, causal, window, S, d, bq, bk):
+    rng = np.random.default_rng(0)
+    B, H = 2, 2
+    mk = lambda: jnp.asarray(rng.normal(size=(B, S, H, d)), dtype)  # noqa
+    q, k, v = mk(), mk(), mk()
+    scale = 1.0 / np.sqrt(d)
+    o = flash_attention(q, k, v, scale, causal, window, bq, bk, True)
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    want = attention_ref(qb, kb, vb, scale=scale, causal=causal,
+                         window=window)
+    want = want.reshape(B, H, S, d).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_grads_match_dense():
+    rng = np.random.default_rng(3)
+    B, S, H, d = 1, 128, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, d)), jnp.float32)
+    scale = 1.0 / np.sqrt(d)
+
+    def loss_flash(q, k, v):
+        return (flash_attention(q, k, v, scale, True, None, 32, 32,
+                                True) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        qb = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+        kb = k.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+        vb = v.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+        return (attention_ref(qb, kb, vb, scale=scale, causal=True) ** 2).sum()
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-3)
+
+
+# -------------------------------------------------------------- ssd scan
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_naive(chunk, dtype):
+    rng = np.random.default_rng(chunk)
+    B, S, H, P, N = 2, 128, 2, 16, 8
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), dtype)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), dtype)
+    A = jnp.asarray(-np.exp(rng.normal(size=H)), jnp.float32)
+    y = ssd_scan(x, dt, Bm, Cm, A, chunk=chunk)
+    want, _ = ssd_naive(x, dt, Bm, Cm, A)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_ssd_chunked_equals_naive_hypothesis(B, H, seed):
+    rng = np.random.default_rng(seed)
+    S, P, N = 64, 8, 4
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, size=(B, S, H)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    A = jnp.asarray(-np.exp(rng.normal(size=H)), jnp.float32)
+    y1, s1 = ssd_chunked(x, dt, Bm, Cm, A, chunk=16)
+    y2, s2 = ssd_naive(x, dt, Bm, Cm, A)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4,
+                               rtol=1e-3)
+
+
+# ----------------------------------------------------------- flash decode
+@pytest.mark.parametrize("K", [2, 4])
+@pytest.mark.parametrize("T,bk", [(128, 32), (256, 64)])
+def test_flash_decode_matches_ref(K, T, bk):
+    rng = np.random.default_rng(T + K)
+    B, H, d = 2, 4, 32
+    q = jnp.asarray(rng.normal(size=(B, 1, H, d)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(B, T, K, d)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(B, T, K, d)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(B, 1, K, d)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(B, 1, K, d)), jnp.float32)
+    scale = 1.0 / np.sqrt(d)
+    o = flash_decode(q, kc, vc, kn, vn, scale=scale, block_k=bk)
+    want = flash_decode_ref(q, kc, vc, kn, vn, scale=scale)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_lse_merge_equals_monolithic():
+    """Sharded partial softmax + LSE merge == single-pass softmax: the
+    distributed flash-decode combiner is exact."""
+    from repro.kernels.flash_decode.kernel import flash_decode_partial
+
+    rng = np.random.default_rng(9)
+    B, H, d, T = 1, 2, 16, 128
+    q = jnp.asarray(rng.normal(size=(B, H, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, H, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, H, d)), jnp.float32)
+    scale = 1.0 / np.sqrt(d)
+    whole = flash_decode_partial(q, k, v, scale=scale, block_k=32)
+    merged = lse_merge([
+        flash_decode_partial(q, k[:, :64], v[:, :64], scale=scale,
+                             block_k=32),
+        flash_decode_partial(q, k[:, 64:], v[:, 64:], scale=scale,
+                             block_k=32),
+    ])
+    want = whole[0] / whole[2]
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)

@@ -1,0 +1,115 @@
+"""Stage-equivalence: every KATANA rewrite is an exact algebraic
+transform — all stages must track the float64 oracle, and hypothesis
+sweeps random linear systems through the rewrite algebra."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import ref
+from repro.core.filters import FilterModel, get_filter
+from repro.core.rewrites import (
+    STAGES,
+    block_diag_batched,
+    build_stage,
+    extract_diag_blocks,
+    run_sequence,
+    small_inv,
+)
+
+TOL = 2e-4  # fp32 vs fp64 over 50 recursions
+
+
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+@pytest.mark.parametrize("stage", STAGES)
+def test_stage_matches_oracle(kind, stage):
+    model = get_filter(kind)
+    rng = np.random.default_rng(0)
+    T = 50
+    N = 1 if stage in ("baseline", "opt1", "opt2") else 8
+    zs = rng.normal(size=(T, N, model.m)) * 0.5
+    x0 = np.tile(model.x0, (N, 1)) + rng.normal(size=(N, model.n)) * 0.1
+    P0 = np.tile(model.P0, (N, 1, 1))
+    want, _, _ = ref.run_batched(model, zs, x0, P0)
+    got = np.asarray(run_sequence(model, stage, zs, x0, P0))
+    np.testing.assert_allclose(got, want, atol=TOL, rtol=TOL)
+
+
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+def test_blockdiag_equals_lanes(kind):
+    """Paper batching and TPU-native batching are numerically twins."""
+    model = get_filter(kind)
+    rng = np.random.default_rng(1)
+    T, N = 30, 16
+    zs = rng.normal(size=(T, N, model.m)) * 0.5
+    x0 = np.tile(model.x0, (N, 1)) + rng.normal(size=(N, model.n)) * 0.1
+    P0 = np.tile(model.P0, (N, 1, 1))
+    bd = np.asarray(run_sequence(model, "batched_blockdiag", zs, x0, P0))
+    ln = np.asarray(run_sequence(model, "batched_lanes", zs, x0, P0))
+    np.testing.assert_allclose(bd, ln, atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("dim", [1, 2, 3, 4])
+def test_small_inv_matches_numpy(dim):
+    rng = np.random.default_rng(dim)
+    A = rng.normal(size=(32, dim, dim))
+    A = A @ np.swapaxes(A, -1, -2) + 3 * np.eye(dim)  # well-conditioned SPD
+    got = np.asarray(small_inv(jnp.asarray(A, jnp.float32), dim))
+    want = np.linalg.inv(A)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-3)
+
+
+@given(st.integers(1, 12), st.integers(1, 5), st.integers(1, 5),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_blockdiag_roundtrip(N, a, b, seed):
+    rng = np.random.default_rng(seed)
+    blocks = rng.normal(size=(N, a, b)).astype(np.float32)
+    bd = np.asarray(block_diag_batched(jnp.asarray(blocks)))
+    assert bd.shape == (N * a, N * b)
+    # diagonal blocks round-trip; off-diagonal blocks are zero
+    if a == b:
+        back = np.asarray(extract_diag_blocks(jnp.asarray(bd), N, a))
+        np.testing.assert_allclose(back, blocks)
+    mask = np.kron(np.eye(N), np.ones((a, b)))
+    np.testing.assert_allclose(bd * (1 - mask), 0)
+
+
+@given(st.integers(2, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_random_linear_system_stage_equivalence(m, seed):
+    """hypothesis: random stable linear systems — opt2 == oracle."""
+    rng = np.random.default_rng(seed)
+    n = m + rng.integers(0, 3)
+    A = rng.normal(size=(n, n))
+    F = 0.9 * A / max(1.0, np.max(np.abs(np.linalg.eigvals(A))))
+    H = rng.normal(size=(m, n))
+    Q = np.eye(n) * 10.0 ** rng.uniform(-4, -1)
+    R = np.eye(m) * 10.0 ** rng.uniform(-3, 0)
+    model = FilterModel(
+        name="rand", n=n, m=m, is_linear=True, F=F, H=H, Q=Q, R=R,
+        x0=np.zeros(n), P0=np.eye(n))
+    zs = rng.normal(size=(20, 1, m))
+    x0 = np.zeros((1, n))
+    P0 = np.tile(model.P0, (1, 1, 1))
+    want, _, _ = ref.run_batched(model, zs, x0, P0)
+    got = np.asarray(run_sequence(model, "opt2", zs, x0, P0))
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-2)
+
+
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+def test_covariance_stays_psd(kind):
+    model = get_filter(kind)
+    rng = np.random.default_rng(2)
+    N, T = 4, 80
+    step, _ = build_stage(model, "batched_lanes", N=N, symmetrize=True)
+    x = jnp.asarray(np.tile(model.x0, (N, 1)), jnp.float32)
+    P = jnp.asarray(np.tile(model.P0, (N, 1, 1)), jnp.float32)
+    for t in range(T):
+        z = jnp.asarray(rng.normal(size=(N, model.m)), jnp.float32)
+        x, P = step(x, P, z)
+    Pn = np.asarray(P)
+    for k in range(N):
+        np.testing.assert_allclose(Pn[k], Pn[k].T, atol=1e-5)
+        assert np.linalg.eigvalsh(Pn[k]).min() > -1e-5

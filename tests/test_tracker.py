@@ -1,0 +1,101 @@
+"""Filter-bank + MOT tracker system tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bank as bank_lib
+from repro.core.filters import get_filter
+from repro.core.tracker import TrackerConfig, greedy_assign, make_jitted_tracker
+from repro.data.trajectories import SceneConfig, mot_scene
+
+
+def test_greedy_assign_prefers_global_min():
+    cost = jnp.asarray([[1.0, 5.0], [0.5, 9.0]])
+    valid = jnp.ones((2, 2), bool)
+    assoc = greedy_assign(cost, valid, jnp.asarray(100.0), 2)
+    # global min (slot1, meas0) commits first, slot0 takes meas1
+    assert assoc.tolist() == [1, 0]
+
+
+def test_greedy_assign_respects_gate():
+    cost = jnp.asarray([[50.0, 60.0]])
+    valid = jnp.ones((1, 2), bool)
+    assoc = greedy_assign(cost, valid, jnp.asarray(10.0), 1)
+    assert assoc.tolist() == [-1]
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_greedy_assign_is_matching(C, M, seed):
+    """No measurement used twice; no slot assigned twice (it's a matching)."""
+    rng = np.random.default_rng(seed)
+    cost = jnp.asarray(rng.uniform(0, 10, (C, M)).astype(np.float32))
+    valid = jnp.asarray(rng.random((C, M)) > 0.3)
+    assoc = np.asarray(greedy_assign(cost, valid, jnp.asarray(8.0),
+                                     min(C, M)))
+    used = assoc[assoc >= 0]
+    assert len(used) == len(set(used.tolist()))
+
+
+def test_spawn_fills_free_slots_deterministically():
+    model = get_filter("lkf")
+    bank = bank_lib.init_bank(model, capacity=4)
+    z = jnp.asarray(np.arange(12).reshape(4, 3), jnp.float32)
+    unassigned = jnp.asarray([True, False, True, False])
+    bank2 = bank_lib.spawn_tracks(model, bank, z, unassigned)
+    assert bank2.active.tolist() == [True, True, False, False]
+    np.testing.assert_allclose(np.asarray(bank2.x[0, :3]), [0, 1, 2])
+    np.testing.assert_allclose(np.asarray(bank2.x[1, :3]), [6, 7, 8])
+    assert bank2.track_id.tolist()[:2] == [0, 1]
+    assert int(bank2.next_id) == 2
+
+
+def test_prune_retires_coasted_tracks():
+    model = get_filter("lkf")
+    bank = bank_lib.init_bank(model, capacity=2)
+    bank = bank._replace(active=jnp.asarray([True, True]),
+                         misses=jnp.asarray([9, 0], jnp.int32))
+    out = bank_lib.prune_bank(bank, max_misses=5)
+    assert out.active.tolist() == [False, True]
+    assert out.track_id.tolist()[0] == -1
+
+
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+def test_mot_end_to_end(kind):
+    """Tracker locks onto the true number of targets in a noisy scene."""
+    model = get_filter(kind)
+    cfg = TrackerConfig(capacity=32, max_meas=16)
+    scene = SceneConfig(T=80, max_targets=4, max_meas=16, clutter_rate=0.3,
+                        death_rate=0.0)
+    z, valid, truth = mot_scene(model, scene, seed=7)
+    init, step = make_jitted_tracker(model, cfg)
+    bank = init()
+    for t in range(scene.T):
+        res = step(bank, jnp.asarray(z[t], jnp.float32), jnp.asarray(valid[t]))
+        bank = res.bank
+    n_true = len(truth[-1])
+    n_confirmed = int(res.confirmed.sum())
+    assert abs(n_confirmed - n_true) <= 1
+    # slot-conservation invariant: ids never reused while active
+    ids = np.asarray(bank.track_id)[np.asarray(bank.active)]
+    assert len(ids) == len(set(ids.tolist()))
+
+
+def test_bank_static_shapes_single_jit():
+    """The whole frame step is one jittable function (KATANA: one
+    inference call per frame), with zero retraces across frames."""
+    import jax
+
+    model = get_filter("lkf")
+    cfg = TrackerConfig(capacity=16, max_meas=8)
+    init, step = make_jitted_tracker(model, cfg)
+    bank = init()
+    z = jnp.zeros((8, 3), jnp.float32)
+    v = jnp.zeros((8,), bool)
+    step(bank, z, v)  # compile
+    before = step._cache_size()
+    for _ in range(3):
+        res = step(bank, z, v)
+        bank = res.bank
+    assert step._cache_size() == before
