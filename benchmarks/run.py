@@ -12,7 +12,7 @@ import sys
 import traceback
 from typing import List
 
-ALL = ("accuracy", "fig4", "batching", "table1", "roofline")
+ALL = ("accuracy", "fig4", "batching", "table1", "roofline", "scan_fusion")
 
 
 def main(argv=None) -> None:

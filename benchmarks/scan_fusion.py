@@ -1,0 +1,94 @@
+"""Scan-fusion bench: the cost of dispatch granularity on the hot path.
+
+Three ways to filter the same (T, N, m) stream, timed end-to-end:
+
+  ``step_loop``   T dispatches of the per-frame ``katana_bank`` kernel —
+        the covariance bank round-trips HBM (and the AoS<->SoA
+        transposes + lane padding are re-paid) every frame.
+  ``fused_scan``  ONE ``katana_bank_sequence`` dispatch: time loop
+        inside the kernel, x/P resident across frames, layout work paid
+        once per sequence.
+  ``lanes_scan``  the batched_lanes einsum stage under one jitted
+        lax.scan — the XLA (non-Pallas) reference point.
+
+Reported per (filter kind, N): per-frame latency (us) and frame
+throughput (steps/sec), plus the fused-vs-step_loop speedup. Results
+also land in BENCH_scan.json at the repo root so the perf trajectory of
+the core workload is tracked from this PR onward.
+
+Interpret-mode numbers (this container is CPU-only) measure dispatch +
+interpreter overhead, not TPU silicon — but that is exactly the axis
+this rewrite removes: one dispatch per sequence vs one per frame.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core.filters import get_filter
+from repro.core.rewrites import build_stage
+from repro.kernels.katana_bank.ops import katana_bank, katana_bank_sequence
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_scan.json"
+
+
+def _inputs(model, N: int, T: int):
+    rng = np.random.default_rng(N + T)
+    zs = jnp.asarray(rng.normal(size=(T, N, model.m)) * 0.5, jnp.float32)
+    x0 = jnp.asarray(np.tile(model.x0, (N, 1)), jnp.float32)
+    P0 = jnp.asarray(np.tile(model.P0, (N, 1, 1)), jnp.float32)
+    return zs, x0, P0
+
+
+def run(csv: List[str], Ns=(64, 256, 1024), T: int = 32) -> None:
+    rows = []
+    for kind in ("lkf", "ekf"):
+        model = get_filter(kind)
+        for N in Ns:
+            zs, x0, P0 = _inputs(model, N, T)
+
+            def step_loop(zs=zs, x0=x0, P0=P0):
+                x, P = x0, P0
+                for t in range(T):
+                    x, P = katana_bank(model, x, P, zs[t])
+                return x
+
+            def fused(zs=zs, x0=x0, P0=P0):
+                return katana_bank_sequence(model, zs, x0, P0)
+
+            lanes_step, _ = build_stage(model, "batched_lanes", N=N)
+
+            @jax.jit
+            def lanes_scan(zs=zs, x0=x0, P0=P0):
+                def body(carry, z_t):
+                    x, P = lanes_step(*carry, z_t)
+                    return (x, P), x
+                _, xs = jax.lax.scan(body, (x0, P0), zs)
+                return xs
+
+            timings = {}
+            for name, fn in (("step_loop", step_loop), ("fused_scan", fused),
+                             ("lanes_scan", lanes_scan)):
+                sec = time_fn(fn, iters=3, warmup=1)
+                per_frame_us = sec / T * 1e6
+                steps_per_sec = T / sec
+                timings[name] = dict(us_per_frame=per_frame_us,
+                                     steps_per_sec=steps_per_sec)
+                csv.append(f"scan_fusion/{kind}/{name}/N={N},"
+                           f"{per_frame_us:.1f},"
+                           f"steps_per_sec={steps_per_sec:.1f}")
+            speedup = (timings["fused_scan"]["steps_per_sec"]
+                       / timings["step_loop"]["steps_per_sec"])
+            csv.append(f"scan_fusion/{kind}/speedup_fused_vs_loop/N={N},0,"
+                       f"x{speedup:.2f}")
+            rows.append(dict(kind=kind, N=N, T=T, speedup_fused_vs_loop=speedup,
+                             **{k: v for k, v in timings.items()}))
+    BENCH_JSON.write_text(json.dumps(
+        dict(bench="scan_fusion", mode="interpret", T=T, rows=rows),
+        indent=2) + "\n")

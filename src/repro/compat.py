@@ -1,0 +1,32 @@
+"""Thin jax version-compat layer.
+
+The repo targets current jax but must degrade gracefully on the older
+runtime baked into CI/containers (0.4.x): ``jax.shard_map`` and
+``jax.sharding.AxisType`` only exist on newer releases, and the old
+spelling lives under ``jax.experimental.shard_map`` with ``check_rep``
+instead of ``check_vma``. Keep every such switch here so call sites
+stay clean.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis: str) -> int:
+    """Static size of a named mesh axis, from inside shard_map/pmap."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    frame = jax.core.axis_frame(axis)  # int on 0.4.x, frame on some builds
+    return getattr(frame, "size", frame)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Version-portable shard_map (check=False disables the rep/vma
+    static checker on either API)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check)

@@ -48,10 +48,19 @@ def init_bank(model: FilterModel, capacity: int, dtype=jnp.float32) -> BankState
 
 
 def predict_bank(model: FilterModel, bank: BankState,
-                 dtype=jnp.float32) -> Tuple[BankState, jnp.ndarray, jnp.ndarray]:
+                 dtype=jnp.float32) -> Tuple[BankState, jnp.ndarray,
+                                             jnp.ndarray, jnp.ndarray,
+                                             jnp.ndarray]:
     """Time-update every slot (inactive slots are harmlessly propagated —
-    static shapes beat branching). Returns (bank', z_pred (C, m),
-    S (C, m, m)) for gating/association."""
+    static shapes beat branching).
+
+    Returns (bank', z_pred (C, m), S (C, m, m), Sinv (C, m, m),
+    PHt (C, n, m)). The innovation covariance, its cofactor inverse and
+    P·Hᵀ are computed HERE, exactly once per frame; gating
+    (``tracker.mahalanobis_cost``) and the measurement update
+    (``update_bank``) consume these instead of rebuilding them — the
+    KATANA single-pass discipline applied to the MOT hot path.
+    """
     C = stage_constants(model, dtype)
     x, P = bank.x, bank.P
     if model.is_linear:
@@ -64,16 +73,24 @@ def predict_bank(model: FilterModel, bank: BankState,
         FP = jnp.einsum("kij,kjl->kil", Fk, P)
         P_pred = jnp.einsum("kil,kjl->kij", FP, Fk) + C.Q
     z_pred = jnp.einsum("mi,ki->km", C.H, x_pred)
+    PHt = jnp.einsum("kij,mj->kim", P_pred, C.H)
     S = jnp.einsum("mi,kij,nj->kmn", C.H, P_pred, C.H) + C.R
-    return bank._replace(x=x_pred, P=P_pred), z_pred, S
+    Sinv = small_inv(S, model.m)
+    return bank._replace(x=x_pred, P=P_pred), z_pred, S, Sinv, PHt
 
 
 def update_bank(model: FilterModel, bank: BankState, z: jnp.ndarray,
-                assoc: jnp.ndarray, dtype=jnp.float32) -> BankState:
+                assoc: jnp.ndarray, PHt: Optional[jnp.ndarray] = None,
+                Sinv: Optional[jnp.ndarray] = None,
+                dtype=jnp.float32) -> BankState:
     """Measurement-update associated slots.
 
     z: (M, m) padded measurements; assoc: (C,) int32 — index into z for
     each slot, or -1 (no measurement → skip update, bump miss counter).
+    PHt (C, n, m) and Sinv (C, m, m) are the innovation quantities
+    ``predict_bank`` already computed for this frame — pass them through
+    (as ``frame_step`` does) so the update never rebuilds S or inverts
+    it a second time. The None fallback recomputes for standalone use.
     Runs the full batched update unconditionally and select-masks the
     result (static shapes; the redundant lanes are the price of zero
     control flow, the same trade the paper makes on the DPU).
@@ -82,10 +99,13 @@ def update_bank(model: FilterModel, bank: BankState, z: jnp.ndarray,
     has_z = assoc >= 0
     zk = z[jnp.clip(assoc, 0, z.shape[0] - 1)]  # (Cap, m), garbage where -1
     x_pred, P_pred = bank.x, bank.P
+    if PHt is None:
+        PHt = jnp.einsum("kij,mj->kim", P_pred, C.H)
+    if Sinv is None:
+        S = jnp.einsum("mi,kij,nj->kmn", C.H, P_pred, C.H) + C.R
+        Sinv = small_inv(S, model.m)
     y = zk + jnp.einsum("mi,ki->km", C.H_neg, x_pred)
-    PHt = jnp.einsum("kij,mj->kim", P_pred, C.H)
-    S = jnp.einsum("mi,kij,nj->kmn", C.H, P_pred, C.H) + C.R
-    K = jnp.einsum("kim,kmn->kin", PHt, small_inv(S, model.m))
+    K = jnp.einsum("kim,kmn->kin", PHt, Sinv)
     x_new = x_pred + jnp.einsum("kin,kn->ki", K, y)
     HnP = jnp.einsum("mi,kij->kmj", C.H_neg, P_pred)
     P_new = P_pred + jnp.einsum("kim,kmj->kij", K, HnP)

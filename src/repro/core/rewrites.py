@@ -27,6 +27,12 @@ TPU-native beyond-paper batching:
                         algebra batched via einsum; identical numerics
                         at ~N^2 less compute. This is the layout the
                         ``katana_bank`` Pallas kernel implements.
+  ``fused_scan``        Sequence-level Opt-2: the whole (T, N, m)
+                        measurement stream through ONE Pallas dispatch
+                        (``katana_bank_sequence``) — the time loop runs
+                        inside the kernel with x/P VMEM-resident across
+                        frames, instead of a per-frame pallas_call with
+                        the covariance bank bouncing through HBM.
 
 Every stage is algebraically the same filter; tests assert equivalence
 against the float64 oracle in ``repro.core.ref``.
@@ -43,7 +49,8 @@ import numpy as np
 
 from repro.core.filters import FilterModel
 
-STAGES = ("baseline", "opt1", "opt2", "batched_blockdiag", "batched_lanes")
+STAGES = ("baseline", "opt1", "opt2", "batched_blockdiag", "batched_lanes",
+          "fused_scan")
 
 
 # ---------------------------------------------------------------------------
@@ -365,6 +372,28 @@ def build_batched_lanes(model: FilterModel, N: int, dtype=jnp.float32,
     return step, meta
 
 
+def build_fused_scan(model: FilterModel, N: int, dtype=jnp.float32,
+                     symmetrize: bool = False) -> Tuple[Callable, Dict]:
+    """The Pallas ``katana_bank`` kernel as a stage. State: x (N, n);
+    P (N, n, n); z (N, m) — canonical layout, same as batched_lanes.
+
+    The per-step view dispatches the fused single-frame kernel; the
+    sequence view (``run_sequence``) dispatches ONE multi-frame scan
+    kernel for the whole stream — see
+    ``repro.kernels.katana_bank.ops.katana_bank_sequence``. The kernel
+    computes in f32 lanes regardless of ``dtype``.
+    """
+    from repro.kernels.katana_bank.ops import katana_bank
+
+    n, m = model.n, model.m
+
+    def step(x, P, z):
+        return katana_bank(model, x, P, z, symmetrize=symmetrize)
+
+    meta = dict(stage="fused_scan", layout="batched", n=n, m=m, N=N)
+    return step, meta
+
+
 def build_stage(model: FilterModel, stage: str, N: Optional[int] = None,
                 dtype=jnp.float32, symmetrize: bool = False):
     """Uniform entry point; returns (step, meta)."""
@@ -380,6 +409,9 @@ def build_stage(model: FilterModel, stage: str, N: Optional[int] = None,
     if stage == "batched_lanes":
         assert N is not None
         return build_batched_lanes(model, N, dtype, symmetrize)
+    if stage == "fused_scan":
+        assert N is not None
+        return build_fused_scan(model, N, dtype, symmetrize)
     raise KeyError(f"unknown stage {stage!r}; known: {STAGES}")
 
 
@@ -396,7 +428,7 @@ def canonical_to_stage(stage: str, x, P, z, n: int, m: int):
     if stage == "batched_blockdiag":
         N = x.shape[0]
         return x.reshape(N * n), block_diag_batched(P), z.reshape(N * m)
-    return x, P, z  # batched_lanes is canonical
+    return x, P, z  # batched_lanes / fused_scan are canonical
 
 
 def stage_to_canonical(stage: str, x, P, n: int, m: int, N: int):
@@ -421,6 +453,14 @@ def run_sequence(model: FilterModel, stage: str, zs, x0, P0,
     n = model.n
     if stage in ("baseline", "opt1", "opt2"):
         assert N == 1, f"stage {stage} is single-filter"
+    if stage == "fused_scan":
+        # Sequence-native stage: one kernel dispatch for the whole
+        # stream instead of a lax.scan over per-frame steps.
+        from repro.kernels.katana_bank.ops import katana_bank_sequence
+
+        return katana_bank_sequence(model, zs, jnp.asarray(x0, dtype),
+                                    jnp.asarray(P0, dtype),
+                                    symmetrize=symmetrize)
     step, _ = build_stage(model, stage, N=N, dtype=dtype, symmetrize=symmetrize)
 
     x, P, _ = canonical_to_stage(stage, jnp.asarray(x0, dtype),

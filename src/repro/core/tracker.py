@@ -2,18 +2,21 @@
 
 Everything is a single jittable frame-step with static shapes:
 
-  1. predict all slots (batched-lanes rewrite),
-  2. Mahalanobis gating against the innovation covariance S,
+  1. predict all slots (batched-lanes rewrite) — this ALSO yields the
+     frame's innovation quantities S, S^{-1} and P·Hᵀ, computed exactly
+     once,
+  2. Mahalanobis gating against the precomputed S^{-1},
   3. greedy globally-ordered assignment (iterated masked argmin — a
      fixed ``max_assign`` rounds of lax.fori_loop),
-  4. measurement update of associated slots,
+  4. measurement update of associated slots, reusing the same S^{-1}
+     and P·Hᵀ (no second cofactor inversion),
   5. spawn tentative tracks for unassigned measurements,
   6. prune coasted tracks.
 
 The association cost is the squared Mahalanobis distance
-``d = y^T S^{-1} y`` computed with the same cofactor inversion the
-update uses; the chi-square gate defaults to the 99% quantile for the
-measurement dimension.
+``d = y^T S^{-1} y`` using the SAME cofactor inverse the update's
+Kalman gain uses — one ``small_inv`` per frame, total; the chi-square
+gate defaults to the 99% quantile for the measurement dimension.
 """
 from __future__ import annotations
 
@@ -27,7 +30,6 @@ import numpy as np
 from repro.core import bank as bank_lib
 from repro.core.bank import BankState
 from repro.core.filters import FilterModel
-from repro.core.rewrites import small_inv
 
 # 99% chi-square quantiles by dof (m <= 6 covers the paper's workloads)
 CHI2_99 = {1: 6.63, 2: 9.21, 3: 11.34, 4: 13.28, 5: 15.09, 6: 16.81}
@@ -50,10 +52,11 @@ class FrameResult(NamedTuple):
     confirmed: jnp.ndarray    # (C,) bool — active & hits >= min_hits
 
 
-def mahalanobis_cost(z_pred: jnp.ndarray, S: jnp.ndarray, z: jnp.ndarray,
-                     m: int) -> jnp.ndarray:
-    """(C, m), (C, m, m), (M, m) -> (C, M) squared Mahalanobis."""
-    Sinv = small_inv(S, m)                        # (C, m, m)
+def mahalanobis_cost(z_pred: jnp.ndarray, Sinv: jnp.ndarray,
+                     z: jnp.ndarray) -> jnp.ndarray:
+    """(C, m), (C, m, m) precomputed S^{-1}, (M, m) -> (C, M) squared
+    Mahalanobis. Takes the inverse ``predict_bank`` already produced —
+    gating never re-inverts the innovation covariance."""
     y = z[None, :, :] - z_pred[:, None, :]        # (C, M, m)
     return jnp.einsum("cMm,cmn,cMn->cM", y, Sinv, y)
 
@@ -95,12 +98,13 @@ def frame_step(model: FilterModel, cfg: TrackerConfig, bank: BankState,
     """One tracking frame. z: (max_meas, m); z_valid: (max_meas,) bool."""
     dtype = jnp.dtype(cfg.dtype)
     gate = cfg.gate or CHI2_99.get(model.m, 16.0)
-    bank_p, z_pred, S = bank_lib.predict_bank(model, bank, dtype)
-    cost = mahalanobis_cost(z_pred, S, z.astype(dtype), model.m)
+    bank_p, z_pred, _S, Sinv, PHt = bank_lib.predict_bank(model, bank, dtype)
+    cost = mahalanobis_cost(z_pred, Sinv, z.astype(dtype))
     valid = bank_p.active[:, None] & z_valid[None, :]
     rounds = min(cfg.capacity, cfg.max_meas)
     assoc = greedy_assign(cost, valid, jnp.asarray(gate, dtype), rounds)
-    bank_u = bank_lib.update_bank(model, bank_p, z.astype(dtype), assoc, dtype)
+    bank_u = bank_lib.update_bank(model, bank_p, z.astype(dtype), assoc,
+                                  PHt, Sinv, dtype)
     taken = jnp.zeros((cfg.max_meas,), bool).at[
         jnp.clip(assoc, 0, cfg.max_meas - 1)
     ].max(assoc >= 0)

@@ -23,13 +23,28 @@ GEMM-only pipeline could not:
   * the CTRA Jacobian's sparsity (7 off-identity entries) makes
     F P F^T cost O(nnz·n) lane-ops instead of n^3.
 
+Two kernel shapes share the same emitted step math (``make_step_fn``):
+
+  ``make_kernel``       one predict+update per pallas_call (the
+        original per-frame dispatch, still used for single-frame
+        serving).
+  ``make_scan_kernel``  a (T, m, lane_tile) measurement stream in one
+        pallas_call: fori_loop over T inside the kernel body with x and
+        P carried in VMEM/VREGs across frames — the sequence-level
+        extension of Opt-2. The covariance bank never round-trips
+        through HBM between frames. Note the measurement/output blocks
+        are whole-T VMEM blocks, so T is VMEM-bounded on real hardware;
+        ``ops.katana_bank_sequence`` chunks long streams over
+        ``time_chunk``-sized dispatches, carrying (x, P) between them.
+
 Layout: struct-of-arrays, lanes-minor —
-  x (n, N), P (n, n, N), z (m, N); grid tiles N by `lane_tile`.
+  x (n, N), P (n, n, N), z (m, N) / zs (T, m, N); grid tiles N by
+  ``lane_tile``.
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -132,10 +147,8 @@ def _emit_small_inv(S, m):
         D = [[S[i + 2][j + 2] for j in range(2)] for i in range(2)]
 
         def mul2(X, Y):
-            return [[X[0][0] * Y[0][j] + X[0][1] * Y[1][j] for j in range(2)]
-                    for _ in (0,)][0] and [
-                [X[i][0] * Y[0][j] + X[i][1] * Y[1][j] for j in range(2)]
-                for i in range(2)]
+            return [[X[i][0] * Y[0][j] + X[i][1] * Y[1][j]
+                     for j in range(2)] for i in range(2)]
 
         def sub2(X, Y):
             return [[X[i][j] - Y[i][j] for j in range(2)] for i in range(2)]
@@ -162,22 +175,28 @@ def _emit_small_inv(S, m):
     raise NotImplementedError(m)
 
 
-def make_kernel(model: FilterModel, symmetrize: bool = True):
-    """Build the Pallas kernel body for this filter model."""
+def make_step_fn(model: FilterModel, symmetrize: bool = True):
+    """Emit one fused predict+update on lane vectors.
+
+    Returns ``step(xv, P, z) -> (x', P')`` where xv is a length-n list
+    of (lane,) vectors, P an n x n nested list of lane vectors, z a
+    length-m list. Shared by the per-frame kernel and the multi-frame
+    scan kernel so both dispatch shapes are numerically identical.
+    """
     n, m = model.n, model.m
     obs = _selector_rows(np.asarray(model.H))
-    Hnp = np.asarray(model.H, np.float64)
+    if obs is None:
+        raise NotImplementedError(
+            "katana_bank requires a selector measurement matrix (every row "
+            "of H a unit vector, true for both paper workloads); for a "
+            "general dense H use the 'batched_lanes' rewrite stage instead.")
     Qnp = np.asarray(model.Q, np.float64)
     Rnp = np.asarray(model.R, np.float64)
     Fnp = np.asarray(model.F, np.float64)
     dt = float(model.dt)
     is_linear = model.is_linear
 
-    def kernel(x_ref, P_ref, z_ref, x_out, P_out):
-        xv = [x_ref[i, :] for i in range(n)]
-        P = [[P_ref[i, j, :] for j in range(n)] for i in range(n)]
-        z = [z_ref[i, :] for i in range(m)]
-
+    def step(xv, P, z):
         # ---- predict ----
         if is_linear:
             F = _mat_from_np(Fnp)
@@ -212,29 +231,13 @@ def make_kernel(model: FilterModel, symmetrize: bool = True):
                 if q != 0.0:
                     Pp[i][j] = Pp[i][j] + q
 
-        # ---- update (selector-H fast path or dense lane GEMM) ----
-        if obs is not None:
-            # y = z + H_neg x̂  (Opt-1: sign folded at trace time)
-            y = [z[r] - xp[obs[r]] for r in range(m)]
-            # S = P[obs][obs] + R — pure selection, no GEMM
-            S = [[Pp[obs[r]][obs[c]] + float(Rnp[r, c]) for c in range(m)]
-                 for r in range(m)]
-            PHt = [[Pp[i][obs[r]] for r in range(m)] for i in range(n)]
-        else:
-            Hl = _mat_from_np(Hnp)
-            y = []
-            for r in range(m):
-                acc = z[r]
-                for j in range(n):
-                    h = Hl[r][j]
-                    if h != 0.0:
-                        acc = acc - h * xp[j]
-                y.append(acc)
-            PHt = [[sum_terms([Pp[i][j] * Hl[r][j] for j in range(n)
-                               if Hl[r][j] != 0.0]) for r in range(m)]
-                   for i in range(n)]
-            S = [[sum_terms([Hl[r][j] * PHt[j_][r_] for j, j_, r_ in ()])]]
-            raise NotImplementedError("general H: use batched_lanes")
+        # ---- update (selector-H: S is covariance selection, no GEMM) ----
+        # y = z + H_neg x̂  (Opt-1: sign folded at trace time)
+        y = [z[r] - xp[obs[r]] for r in range(m)]
+        # S = P[obs][obs] + R — pure selection
+        S = [[Pp[obs[r]][obs[c]] + float(Rnp[r, c]) for c in range(m)]
+             for r in range(m)]
+        PHt = [[Pp[i][obs[r]] for r in range(m)] for i in range(n)]
         Sinv = _emit_small_inv(S, m)
         K = [[None] * m for _ in range(n)]
         for i in range(n):
@@ -245,11 +248,12 @@ def make_kernel(model: FilterModel, symmetrize: bool = True):
                     acc = t if acc is None else acc + t
                 K[i][r] = acc
         # x' = x̂ + K y
+        xn = []
         for i in range(n):
             acc = xp[i]
             for r in range(m):
                 acc = acc + K[i][r] * y[r]
-            x_out[i, :] = acc
+            xn.append(acc)
         # P' = P̂ + K (H_neg P̂) = P̂ - K P̂[obs, :]
         Pn = [[None] * n for _ in range(n)]
         for i in range(n):
@@ -260,18 +264,58 @@ def make_kernel(model: FilterModel, symmetrize: bool = True):
                 Pn[i][j] = acc
         if symmetrize:
             Pn = _sym(Pn, n)
+        return xn, Pn
+
+    return step
+
+
+def make_kernel(model: FilterModel, symmetrize: bool = True):
+    """Build the per-frame Pallas kernel body for this filter model."""
+    n, m = model.n, model.m
+    step = make_step_fn(model, symmetrize)
+
+    def kernel(x_ref, P_ref, z_ref, x_out, P_out):
+        xv = [x_ref[i, :] for i in range(n)]
+        P = [[P_ref[i, j, :] for j in range(n)] for i in range(n)]
+        z = [z_ref[i, :] for i in range(m)]
+        xn, Pn = step(xv, P, z)
         for i in range(n):
+            x_out[i, :] = xn[i]
             for j in range(n):
                 P_out[i, j, :] = Pn[i][j]
 
     return kernel
 
 
-def sum_terms(ts):
-    acc = None
-    for t in ts:
-        acc = t if acc is None else acc + t
-    return acc
+def make_scan_kernel(model: FilterModel, T: int, symmetrize: bool = True):
+    """Build the multi-frame Pallas kernel body: fori_loop over T with
+    x and P resident in VMEM/VREGs for the whole sequence; each step
+    reads one (m, lane) slice of the T-frame measurement block and
+    writes one (n, lane) slice of the T-frame output block (both blocks
+    live in VMEM for the dispatch — see katana_bank_scan_step on the
+    resulting T bound)."""
+    n, m = model.n, model.m
+    step = make_step_fn(model, symmetrize)
+
+    def kernel(x_ref, P_ref, zs_ref, xs_out, x_fin, P_fin):
+        x0 = [x_ref[i, :] for i in range(n)]
+        P0 = [[P_ref[i, j, :] for j in range(n)] for i in range(n)]
+
+        def body(t, carry):
+            xv, P = carry
+            zt = zs_ref[pl.ds(t, 1)]  # (1, m, lane)
+            z = [zt[0, r, :] for r in range(m)]
+            xn, Pn = step(xv, P, z)
+            xs_out[pl.ds(t, 1)] = jnp.stack(xn)[None]
+            return xn, Pn
+
+        xT, PT = jax.lax.fori_loop(0, T, body, (x0, P0))
+        for i in range(n):
+            x_fin[i, :] = xT[i]
+            for j in range(n):
+                P_fin[i, j, :] = PT[i][j]
+
+    return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("model", "lane_tile",
@@ -304,3 +348,49 @@ def katana_bank_step(model: FilterModel, x, P, z, lane_tile: int = LANE_TILE,
         ],
         interpret=interpret,
     )(x, P, z)
+
+
+@functools.partial(jax.jit, static_argnames=("model", "lane_tile",
+                                             "symmetrize", "interpret"))
+def katana_bank_scan_step(model: FilterModel, x, P, zs,
+                          lane_tile: int = LANE_TILE,
+                          symmetrize: bool = True, interpret: bool = True):
+    """Whole-sequence fused scan, one pallas_call per sequence.
+
+    x: (n, N); P: (n, n, N); zs: (T, m, N) — lanes-minor (SoA) layout.
+    Returns (xs (T, n, N), x_fin (n, N), P_fin (n, n, N)).
+
+    The grid tiles N only; the time loop runs INSIDE the kernel, so the
+    covariance bank stays VMEM-resident across all T frames (one HBM
+    read of P at entry + one write at exit, vs 2·T round-trips for the
+    per-frame dispatch). The zs/xs blocks are whole-T VMEM blocks —
+    (T·(m+n)·lane_tile·4 bytes per program), which bounds T to a few
+    thousand frames per dispatch on real TPUs; ops.katana_bank_sequence
+    chunks longer streams. N must be a multiple of lane_tile (ops.py
+    pads)."""
+    n, m = model.n, model.m
+    T = zs.shape[0]
+    N = x.shape[-1]
+    assert N % lane_tile == 0, (N, lane_tile)
+    grid = (N // lane_tile,)
+    kern = make_scan_kernel(model, T, symmetrize)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((n, n, lane_tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((T, m, lane_tile), lambda i: (0, 0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((T, n, lane_tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((n, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((n, n, lane_tile), lambda i: (0, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, n, N), x.dtype),
+            jax.ShapeDtypeStruct((n, N), x.dtype),
+            jax.ShapeDtypeStruct((n, n, N), P.dtype),
+        ],
+        interpret=interpret,
+    )(x, P, zs)

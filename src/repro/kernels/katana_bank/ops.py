@@ -1,8 +1,16 @@
-"""jit'd wrapper for the katana_bank kernel: canonical (N, n) layout in,
-lane-packed (n, N) SoA inside, padding N to the lane tile.
+"""jit'd wrappers for the katana_bank kernels: canonical (N, n) layout
+in, lane-packed (n, N) SoA inside, padding N to the lane tile.
+
+Two dispatch granularities:
+  ``katana_bank``          one predict+update per call (per-frame).
+  ``katana_bank_sequence`` a whole (T, N, m) measurement stream in ONE
+        pallas_call — the AoS->SoA transposes and lane padding are paid
+        once per sequence instead of once per frame, and x/P stay
+        kernel-resident across frames (the time loop is inside the
+        kernel, see kernel.make_scan_kernel).
 
 ``interpret=True`` everywhere in this container (CPU); on a real TPU
-pass interpret=False — the kernel and BlockSpecs are TPU-shaped.
+pass interpret=False — the kernels and BlockSpecs are TPU-shaped.
 """
 from __future__ import annotations
 
@@ -12,7 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.filters import FilterModel
-from repro.kernels.katana_bank.kernel import LANE_TILE, katana_bank_step
+from repro.kernels.katana_bank.kernel import (
+    LANE_TILE,
+    katana_bank_scan_step,
+    katana_bank_step,
+)
 
 
 def _pad_to(x, N_pad, axis=-1):
@@ -43,6 +55,48 @@ def katana_bank(model: FilterModel, x, P, z, lane_tile: int = LANE_TILE,
     x2, P2 = katana_bank_step(model, xs, Ps, zs, lane_tile=lane_tile,
                               symmetrize=symmetrize, interpret=interpret)
     return x2[:, :N].T, P2[:, :, :N].transpose(2, 0, 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "lane_tile", "symmetrize",
+                                    "interpret", "return_final",
+                                    "time_chunk"))
+def katana_bank_sequence(model: FilterModel, zs, x0, P0,
+                         lane_tile: int = LANE_TILE,
+                         symmetrize: bool = True, interpret: bool = True,
+                         return_final: bool = False,
+                         time_chunk: int = 4096):
+    """Fused multi-frame filter: one kernel dispatch per sequence.
+
+    zs: (T, N, m); x0: (N, n); P0: (N, n, n)  ->  xs (T, N, n), the
+    filtered state after every frame. With ``return_final=True`` also
+    returns ``(x_T (N, n), P_T (N, n, n))`` for carrying the bank into
+    the next sequence chunk.
+
+    Layout work (lane padding + AoS->SoA transposes) happens ONCE here,
+    not per frame; the kernel's fori_loop keeps x/P resident across all
+    T steps of a dispatch. The scan kernel holds whole-T zs/xs blocks
+    in VMEM, so streams longer than ``time_chunk`` frames run as
+    ceil(T / time_chunk) dispatches with (x, P) carried between them —
+    the bank still only round-trips HBM once per CHUNK, not per frame.
+    """
+    zs = jnp.asarray(zs)
+    T, N, m = zs.shape
+    N_pad = -(-N // lane_tile) * lane_tile
+    xs_s = _pad_to(jnp.asarray(x0).T, N_pad)            # (n, N_pad)
+    Ps_s = _pad_to(jnp.asarray(P0).transpose(1, 2, 0), N_pad)
+    zs_s = _pad_to(zs.transpose(0, 2, 1), N_pad)        # (T, m, N_pad)
+    chunks = []
+    for t0 in range(0, T, time_chunk):
+        xs, xs_s, Ps_s = katana_bank_scan_step(
+            model, xs_s, Ps_s, zs_s[t0:t0 + time_chunk],
+            lane_tile=lane_tile, symmetrize=symmetrize, interpret=interpret)
+        chunks.append(xs)
+    xs = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
+    out = xs[:, :, :N].transpose(0, 2, 1)               # (T, N, n)
+    if return_final:
+        return out, (xs_s[:, :N].T, Ps_s[:, :, :N].transpose(2, 0, 1))
+    return out
 
 
 def katana_bank_soa(model: FilterModel, x, P, z, **kw):

@@ -4,14 +4,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.core.filters import get_filter
+from repro.core.filters import FilterModel, get_filter
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_decode.ops import flash_decode, lse_merge
 from repro.kernels.flash_decode.ref import flash_decode_ref
-from repro.kernels.katana_bank.ops import katana_bank
+from repro.kernels.katana_bank.kernel import _emit_small_inv, make_kernel
+from repro.kernels.katana_bank.ops import katana_bank, katana_bank_sequence
 from repro.kernels.katana_bank.ref import katana_bank_ref
 from repro.kernels.ssd_scan.ops import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_naive
@@ -66,6 +67,114 @@ def test_katana_bank_hypothesis(N, seed):
     xr, Pr = katana_bank_ref(model, x, P, z)
     np.testing.assert_allclose(np.asarray(xk), np.asarray(xr),
                                atol=5e-5, rtol=5e-4)
+
+
+# ----------------------------------------------------- katana fused scan
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+@pytest.mark.parametrize("N", [5, 130])  # both non-multiples of lane_tile
+def test_fused_scan_matches_oracle_long_sequence(kind, N):
+    """One scan dispatch over T=200 frames tracks the float64 oracle
+    (padding lanes exercised: N is never a multiple of the tile)."""
+    from repro.core import ref as oref
+
+    model = get_filter(kind)
+    rng = np.random.default_rng(N)
+    T = 200
+    zs = rng.normal(size=(T, N, model.m)) * 0.5
+    x0 = np.tile(model.x0, (N, 1)) + rng.normal(size=(N, model.n)) * 0.1
+    P0 = np.tile(model.P0, (N, 1, 1))
+    want, _, _ = oref.run_batched(model, zs, x0, P0)
+    got = katana_bank_sequence(model, jnp.asarray(zs, jnp.float32),
+                               jnp.asarray(x0, jnp.float32),
+                               jnp.asarray(P0, jnp.float32), lane_tile=128)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+def test_fused_scan_matches_batched_lanes(kind):
+    """fused_scan == the batched_lanes einsum stage over a long stream:
+    the in-kernel time loop is a pure fusion, not a numerics change."""
+    from repro.core.rewrites import run_sequence
+
+    model = get_filter(kind)
+    rng = np.random.default_rng(3)
+    T, N = 200, 7
+    zs = rng.normal(size=(T, N, model.m)) * 0.5
+    x0 = np.tile(model.x0, (N, 1)) + rng.normal(size=(N, model.n)) * 0.1
+    P0 = np.tile(model.P0, (N, 1, 1))
+    lanes = np.asarray(run_sequence(model, "batched_lanes", zs, x0, P0,
+                                    symmetrize=True))
+    fused = np.asarray(katana_bank_sequence(
+        model, jnp.asarray(zs, jnp.float32), jnp.asarray(x0, jnp.float32),
+        jnp.asarray(P0, jnp.float32), lane_tile=128))
+    np.testing.assert_allclose(fused, lanes, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+def test_fused_scan_equals_per_step_kernel(kind):
+    """The scan kernel's final (x, P) == T dispatches of the per-frame
+    kernel — same emitted step math, only the dispatch granularity (and
+    the HBM traffic) differs."""
+    model = get_filter(kind)
+    rng = np.random.default_rng(5)
+    T, N = 25, 9
+    zs = rng.normal(size=(T, N, model.m)).astype(np.float32) * 0.5
+    x = jnp.asarray(np.tile(model.x0, (N, 1)), jnp.float32)
+    P = jnp.asarray(np.tile(model.P0, (N, 1, 1)), jnp.float32)
+    _, (xf, Pf) = katana_bank_sequence(model, jnp.asarray(zs), x, P,
+                                       lane_tile=128, return_final=True)
+    for t in range(T):
+        x, P = katana_bank(model, x, P, jnp.asarray(zs[t]), lane_tile=128)
+    np.testing.assert_allclose(np.asarray(xf), np.asarray(x), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(Pf), np.asarray(P), atol=1e-6)
+
+
+def test_fused_scan_time_chunking_is_exact():
+    """Long streams split over time_chunk dispatches (VMEM bound on T)
+    carry (x, P) between chunks bitwise-identically to one dispatch."""
+    model = get_filter("ekf")
+    rng = np.random.default_rng(8)
+    T, N = 50, 6
+    zs = jnp.asarray(rng.normal(size=(T, N, model.m)) * 0.5, jnp.float32)
+    x0 = jnp.asarray(np.tile(model.x0, (N, 1)), jnp.float32)
+    P0 = jnp.asarray(np.tile(model.P0, (N, 1, 1)), jnp.float32)
+    one, (x1, P1) = katana_bank_sequence(model, zs, x0, P0, lane_tile=128,
+                                         return_final=True)
+    chk, (x2, P2) = katana_bank_sequence(model, zs, x0, P0, lane_tile=128,
+                                         return_final=True, time_chunk=16)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(chk))
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(P1), np.asarray(P2))
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 4])
+def test_emit_small_inv_matches_numpy(m):
+    """The kernel's emitted cofactor/Schur inverse (incl. the 2x2 block
+    product inside the m=4 path) == jnp.linalg.inv on SPD lane data."""
+    rng = np.random.default_rng(m)
+    lanes = 16
+    A = rng.normal(size=(lanes, m, m))
+    A = A @ np.swapaxes(A, -1, -2) + 3 * np.eye(m)
+    S = [[jnp.asarray(A[:, i, j], jnp.float32) for j in range(m)]
+         for i in range(m)]
+    out = _emit_small_inv(S, m)
+    got = np.stack([np.stack([np.asarray(out[i][j]) for j in range(m)],
+                             axis=-1) for i in range(m)], axis=-2)
+    want = np.asarray(jnp.linalg.inv(jnp.asarray(A, jnp.float32)))
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-3)
+
+
+def test_make_kernel_rejects_general_H():
+    """Non-selector measurement matrices fail fast at build time with a
+    pointer to the batched_lanes stage (no dead general-H codepath)."""
+    n, m = 4, 2
+    rng = np.random.default_rng(0)
+    model = FilterModel(
+        name="dense-H", n=n, m=m, is_linear=True,
+        F=np.eye(n), H=rng.normal(size=(m, n)), Q=np.eye(n) * 1e-2,
+        R=np.eye(m) * 1e-1, x0=np.zeros(n), P0=np.eye(n))
+    with pytest.raises(NotImplementedError, match="batched_lanes"):
+        make_kernel(model)
 
 
 # ------------------------------------------------------------ flash attn

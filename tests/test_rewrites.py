@@ -3,7 +3,7 @@ transform — all stages must track the float64 oracle, and hypothesis
 sweeps random linear systems through the rewrite algebra."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 

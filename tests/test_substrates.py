@@ -13,6 +13,7 @@ from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs import RunConfig, get_config, reduced
 from repro.data.lm import LMDataPipeline
 from repro.distributed.compression import ef_compress
+from repro.launch import mesh as mesh_lib
 from repro.launch.steps import make_train_step
 from repro.models import model as model_lib
 from repro.optim import adamw
@@ -90,8 +91,7 @@ def test_elastic_restore_onto_new_mesh(tmp_path):
 
     state = {"w": jnp.arange(16, dtype=jnp.float32)}
     ckpt_lib.save(str(tmp_path), 1, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = mesh_lib.make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data"))}
     restored, _ = ckpt_lib.restore(str(tmp_path), state, shardings=sh)
     assert restored["w"].sharding == sh["w"]
@@ -185,14 +185,15 @@ def test_compressed_psum_ring():
 
     from repro.distributed.compression import compressed_psum
 
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = mesh_lib.make_mesh((1,), ("pod",))
 
     def f(x):
         return compressed_psum(x, "pod")
 
-    sharded = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
-                            check_vma=False)
+    from repro import compat
+
+    sharded = compat.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                               check=False)
     x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 16)),
                     jnp.float32)
     out = sharded(x)

@@ -47,3 +47,8 @@ def test_paper_pipeline_end_to_end():
     assert abs(len(tracks) - len(truth_scene[-1])) <= 1
     # real-time: well under the paper's 33 ms frame budget even on CPU
     assert engine.stats.fps > 30
+
+    # 4) offline replay: the whole stream through ONE fused scan
+    # dispatch reproduces the float64 oracle track
+    replayed = engine.replay(zs[:, None, :])
+    np.testing.assert_allclose(replayed[:, 0], want, atol=5e-4, rtol=5e-4)

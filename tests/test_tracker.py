@@ -2,11 +2,13 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import bank as bank_lib
 from repro.core.filters import get_filter
-from repro.core.tracker import TrackerConfig, greedy_assign, make_jitted_tracker
+from repro.core.rewrites import small_inv, stage_constants
+from repro.core.tracker import (TrackerConfig, frame_step, greedy_assign,
+                                make_jitted_tracker)
 from repro.data.trajectories import SceneConfig, mot_scene
 
 
@@ -80,6 +82,122 @@ def test_mot_end_to_end(kind):
     # slot-conservation invariant: ids never reused while active
     ids = np.asarray(bank.track_id)[np.asarray(bank.active)]
     assert len(ids) == len(set(ids.tolist()))
+
+
+def _legacy_frame_step(model, cfg, bank, z, z_valid):
+    """Pre-refactor frame step: every phase rebuilds S / S^{-1} / P·Hᵀ
+    from scratch (predict, gating, update each did their own). Kept as
+    the regression oracle for the single-S hot path."""
+    import jax.numpy as jnp
+    from repro.core.tracker import CHI2_99
+
+    dtype = jnp.dtype(cfg.dtype)
+    gate = cfg.gate or CHI2_99.get(model.m, 16.0)
+    C = stage_constants(model, dtype)
+    # predict (own S)
+    x, P = bank.x, bank.P
+    if model.is_linear:
+        x_pred = jnp.einsum("ij,kj->ki", C.F, x)
+        FP = jnp.einsum("ij,kjl->kil", C.F, P)
+        P_pred = jnp.einsum("kil,jl->kij", FP, C.F) + C.Q
+    else:
+        x_pred = model.predict_mean(x)
+        Fk = model.jacobian(x)
+        FP = jnp.einsum("kij,kjl->kil", Fk, P)
+        P_pred = jnp.einsum("kil,kjl->kij", FP, Fk) + C.Q
+    z_pred = jnp.einsum("mi,ki->km", C.H, x_pred)
+    S = jnp.einsum("mi,kij,nj->kmn", C.H, P_pred, C.H) + C.R
+    bank_p = bank._replace(x=x_pred, P=P_pred)
+    # gating (second S^{-1})
+    Sinv = small_inv(S, model.m)
+    y = z.astype(dtype)[None, :, :] - z_pred[:, None, :]
+    cost = jnp.einsum("cMm,cmn,cMn->cM", y, Sinv, y)
+    valid = bank_p.active[:, None] & z_valid[None, :]
+    rounds = min(cfg.capacity, cfg.max_meas)
+    assoc = greedy_assign(cost, valid, jnp.asarray(gate, dtype), rounds)
+    # update (third S + third inversion)
+    zz = z.astype(dtype)
+    has_z = assoc >= 0
+    zk = zz[jnp.clip(assoc, 0, zz.shape[0] - 1)]
+    yk = zk + jnp.einsum("mi,ki->km", C.H_neg, x_pred)
+    PHt = jnp.einsum("kij,mj->kim", P_pred, C.H)
+    S2 = jnp.einsum("mi,kij,nj->kmn", C.H, P_pred, C.H) + C.R
+    K = jnp.einsum("kim,kmn->kin", PHt, small_inv(S2, model.m))
+    x_new = x_pred + jnp.einsum("kin,kn->ki", K, yk)
+    HnP = jnp.einsum("mi,kij->kmj", C.H_neg, P_pred)
+    P_new = P_pred + jnp.einsum("kim,kmj->kij", K, HnP)
+    P_new = 0.5 * (P_new + jnp.swapaxes(P_new, -1, -2))
+    upd = has_z & bank_p.active
+    x_out = jnp.where(upd[:, None], x_new, x_pred)
+    P_out = jnp.where(upd[:, None, None], P_new, P_pred)
+    hits = jnp.where(upd, bank_p.hits + 1, bank_p.hits)
+    misses = jnp.where(upd, 0, jnp.where(bank_p.active, bank_p.misses + 1,
+                                         bank_p.misses))
+    age = jnp.where(bank_p.active, bank_p.age + 1, bank_p.age)
+    bank_u = bank_p._replace(x=x_out, P=P_out, hits=hits, misses=misses,
+                             age=age)
+    # spawn + prune (unchanged by the refactor)
+    taken = jnp.zeros((cfg.max_meas,), bool).at[
+        jnp.clip(assoc, 0, cfg.max_meas - 1)
+    ].max(assoc >= 0)
+    unassigned = z_valid & ~taken
+    bank_s = bank_lib.spawn_tracks(model, bank_u, zz, unassigned, dtype)
+    bank_f = bank_lib.prune_bank(bank_s, cfg.max_misses)
+    confirmed = bank_f.active & (bank_f.hits >= cfg.min_hits)
+    return bank_f, assoc, unassigned, confirmed
+
+
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+def test_frame_step_single_S_regression(kind):
+    """The single-S refactor (compute S / S^{-1} / P·Hᵀ once in
+    predict_bank, reuse in gating + update) changes NOTHING numerically:
+    frame-by-frame outputs match the legacy recompute-everything step
+    over a full scene."""
+    model = get_filter(kind)
+    cfg = TrackerConfig(capacity=16, max_meas=8)
+    scene = SceneConfig(T=30, max_targets=3, max_meas=8, clutter_rate=0.5,
+                        death_rate=0.0)
+    z, valid, _ = mot_scene(model, scene, seed=13)
+    bank_new = bank_lib.init_bank(model, cfg.capacity)
+    bank_old = bank_lib.init_bank(model, cfg.capacity)
+    for t in range(scene.T):
+        zt = jnp.asarray(z[t], jnp.float32)
+        vt = jnp.asarray(valid[t])
+        res = frame_step(model, cfg, bank_new, zt, vt)
+        old_bank, old_assoc, old_unassigned, old_confirmed = \
+            _legacy_frame_step(model, cfg, bank_old, zt, vt)
+        np.testing.assert_array_equal(np.asarray(res.assoc),
+                                      np.asarray(old_assoc))
+        np.testing.assert_array_equal(np.asarray(res.confirmed),
+                                      np.asarray(old_confirmed))
+        np.testing.assert_allclose(np.asarray(res.bank.x),
+                                   np.asarray(old_bank.x), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(res.bank.P),
+                                   np.asarray(old_bank.P), atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(res.bank.track_id),
+                                      np.asarray(old_bank.track_id))
+        bank_new, bank_old = res.bank, old_bank
+
+
+def test_frame_step_inverts_S_exactly_once(monkeypatch):
+    """Trace-level guarantee of the single-pass hot path: one frame_step
+    triggers exactly ONE innovation-covariance inversion (small_inv) —
+    gating and update reuse it rather than recomputing."""
+    calls = []
+    real = bank_lib.small_inv
+
+    def counting(M, dim):
+        calls.append(dim)
+        return real(M, dim)
+
+    monkeypatch.setattr(bank_lib, "small_inv", counting)
+    model = get_filter("lkf")
+    cfg = TrackerConfig(capacity=8, max_meas=4)
+    bank = bank_lib.init_bank(model, cfg.capacity)
+    z = jnp.asarray(np.random.default_rng(0).normal(size=(4, model.m)),
+                    jnp.float32)
+    frame_step(model, cfg, bank, z, jnp.ones((4,), bool))  # eager trace
+    assert calls == [model.m]
 
 
 def test_bank_static_shapes_single_jit():
