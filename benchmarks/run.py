@@ -12,7 +12,8 @@ import sys
 import traceback
 from typing import List
 
-ALL = ("accuracy", "fig4", "batching", "table1", "roofline", "scan_fusion")
+ALL = ("accuracy", "fig4", "batching", "table1", "roofline", "scan_fusion",
+       "imm")
 
 
 def main(argv=None) -> None:

@@ -1,0 +1,70 @@
+"""End-to-end MOT walkthrough: maneuvering scene -> TrackingEngine ->
+confirmed tracks with IMM mode probabilities.
+
+Three maneuvering targets (CV / coordinated-turn / acceleration segment
+switching) are detected with noise each frame and fed to an IMM
+TrackingEngine. The demo prints the confirmed track table every 20
+frames — watch the mode probabilities shift between CV / CA / CT(+w) /
+CT(-w) as each target maneuvers — and compares the final IMM position
+error against a single-model CV engine on the same detections.
+
+Referenced from docs/architecture.md.
+
+  PYTHONPATH=src python examples/mot_demo.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.filters import get_filter, make_imm  # noqa: E402
+from repro.core.tracker import TrackerConfig  # noqa: E402
+from repro.data.trajectories import maneuvering_batch  # noqa: E402
+from repro.serving.engine import TrackingEngine  # noqa: E402
+
+MODE_NAMES = ("CV", "CA", "CT+", "CT-")
+
+
+def final_position_error(snaps, truth_t):
+    """Mean distance from each confirmed track to its nearest truth."""
+    if not snaps:
+        return float("nan")
+    est = np.stack([s.state[:3] for s in snaps])
+    d = np.linalg.norm(est[:, None] - truth_t[None, :, :3], axis=-1)
+    return float(d.min(axis=1).mean())
+
+
+def main():
+    T, N = 120, 3
+    truth, zs = maneuvering_batch(T, N, seed=11)
+    cfg = TrackerConfig(capacity=16, max_meas=8, min_hits=3)
+
+    imm_engine = TrackingEngine(make_imm(), cfg)
+    cv_engine = TrackingEngine(get_filter("lkf"), cfg)
+
+    print(f"scene: {N} maneuvering targets, {T} frames "
+          f"(segments switch between CV / turns / acceleration)\n")
+    for t in range(T):
+        snaps = imm_engine.submit(zs[t])
+        cv_snaps = cv_engine.submit(zs[t])
+        if (t + 1) % 20 == 0:
+            print(f"frame {t + 1:3d}: {len(snaps)} confirmed IMM tracks")
+            for s in snaps:
+                modes = " ".join(f"{name}={p:.2f}" for name, p in
+                                 zip(MODE_NAMES, s.mode_probs))
+                px, py, pz = s.state[:3]
+                print(f"  track {s.track_id}: pos=({px:+6.2f},{py:+6.2f},"
+                      f"{pz:+6.2f}) hits={s.hits:3d}  {modes}")
+
+    err_imm = final_position_error(snaps, truth[-1])
+    err_cv = final_position_error(cv_snaps, truth[-1])
+    print(f"\nfinal mean position error: IMM {err_imm:.3f} vs "
+          f"single-model CV {err_cv:.3f}")
+    print(f"IMM engine fps (jitted frame steps): "
+          f"{imm_engine.stats.fps:.1f}")
+
+
+if __name__ == "__main__":
+    main()

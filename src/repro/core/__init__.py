@@ -1,5 +1,12 @@
-"""KATANA core: filters, NPU->TPU graph rewrites, filter bank, tracker."""
-from repro.core.filters import FilterModel, get_filter, make_cv_lkf, make_ctra_ekf  # noqa: F401
-from repro.core.rewrites import STAGES, build_stage, run_sequence, small_inv  # noqa: F401
-from repro.core.bank import BankState, init_bank  # noqa: F401
-from repro.core.tracker import TrackerConfig, frame_step, make_jitted_tracker  # noqa: F401
+"""KATANA core: filters, NPU->TPU graph rewrites, filter bank, tracker,
+and the IMM multi-model estimator."""
+from repro.core.filters import (FilterModel, IMMModel, as_imm, get_filter,  # noqa: F401
+                                make_ca9_lkf, make_ct9_lkf, make_ctra_ekf,
+                                make_cv9_lkf, make_cv_lkf, make_imm)
+from repro.core.rewrites import (STAGES, build_stage, imm_combine, imm_mix,  # noqa: F401
+                                 imm_mode_posterior, run_sequence, small_det,
+                                 small_inv)
+from repro.core.bank import (BankState, IMMBankState, init_bank,  # noqa: F401
+                             init_imm_bank)
+from repro.core.tracker import (TrackerConfig, frame_step, imm_frame_step,  # noqa: F401
+                                make_jitted_imm_tracker, make_jitted_tracker)

@@ -4,8 +4,15 @@ The bank is the deployable MOT substrate: a static-shape array of
 ``capacity`` filter slots (state, covariance, lifecycle counters) that
 runs the batched-lanes rewrite every frame. Static shapes everywhere —
 slots are (de)activated by masks, never by reshaping — which is exactly
-the paper's Opt-2 discipline applied at the *system* level, and what
-makes the whole tracker a single jittable step.
+the paper's Opt-2 (§IV-C static-fusion) discipline applied at the
+*system* level, and what makes the whole tracker a single jittable step.
+
+``IMMBankState`` is the multi-model extension: every slot carries K
+model-conditioned (x, P) pairs plus mode probabilities mu, and the
+predict step runs the IMM interaction (mixing) before the K per-model
+time updates — the §IV-D batching axis reused for the model index.
+Lifecycle (active/hits/misses/age/track_id) stays per-SLOT, shared by
+all K hypotheses.
 
 Pod-scale MOT shards the bank over the mesh data axis (see
 ``repro.serving.engine`` / ``repro.launch.serve``).
@@ -18,8 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.filters import FilterModel
-from repro.core.rewrites import build_batched_lanes, small_inv, stage_constants
+from repro.core.filters import FilterModel, IMMModel
+from repro.core.rewrites import (build_batched_lanes, gaussian_loglik,
+                                 imm_mix, imm_mode_posterior, small_det,
+                                 small_inv, stage_constants)
 
 
 class BankState(NamedTuple):
@@ -47,6 +56,43 @@ def init_bank(model: FilterModel, capacity: int, dtype=jnp.float32) -> BankState
     )
 
 
+def _predict_lanes(model: FilterModel, x: jnp.ndarray, P: jnp.ndarray,
+                   dtype=jnp.float32):
+    """Batched-lanes time update + innovation quantities for (C, n)
+    states: returns (x_pred, P_pred, z_pred, S, Sinv, PHt). This is the
+    single place S is built and inverted per (model, frame) — shared by
+    the plain and the IMM bank."""
+    C = stage_constants(model, dtype)
+    if model.is_linear:
+        x_pred = jnp.einsum("ij,kj->ki", C.F, x)
+        FP = jnp.einsum("ij,kjl->kil", C.F, P)
+        P_pred = jnp.einsum("kil,jl->kij", FP, C.F) + C.Q
+    else:
+        x_pred = model.predict_mean(x)
+        Fk = model.jacobian(x)
+        FP = jnp.einsum("kij,kjl->kil", Fk, P)
+        P_pred = jnp.einsum("kil,kjl->kij", FP, Fk) + C.Q
+    z_pred = jnp.einsum("mi,ki->km", C.H, x_pred)
+    PHt = jnp.einsum("kij,mj->kim", P_pred, C.H)
+    S = jnp.einsum("mi,kij,nj->kmn", C.H, P_pred, C.H) + C.R
+    Sinv = small_inv(S, model.m)
+    return x_pred, P_pred, z_pred, S, Sinv, PHt
+
+
+def _kalman_update_lanes(model: FilterModel, x_pred, P_pred, zk, PHt, Sinv,
+                         dtype=jnp.float32):
+    """Subtract-free (H_neg, paper §IV-B) batched measurement update for
+    (C, n) lanes, consuming the precomputed P·Hᵀ and S^{-1}."""
+    C = stage_constants(model, dtype)
+    y = zk + jnp.einsum("mi,ki->km", C.H_neg, x_pred)
+    K = jnp.einsum("kim,kmn->kin", PHt, Sinv)
+    x_new = x_pred + jnp.einsum("kin,kn->ki", K, y)
+    HnP = jnp.einsum("mi,kij->kmj", C.H_neg, P_pred)
+    P_new = P_pred + jnp.einsum("kim,kmj->kij", K, HnP)
+    P_new = 0.5 * (P_new + jnp.swapaxes(P_new, -1, -2))
+    return x_new, P_new
+
+
 def predict_bank(model: FilterModel, bank: BankState,
                  dtype=jnp.float32) -> Tuple[BankState, jnp.ndarray,
                                              jnp.ndarray, jnp.ndarray,
@@ -61,21 +107,8 @@ def predict_bank(model: FilterModel, bank: BankState,
     (``update_bank``) consume these instead of rebuilding them — the
     KATANA single-pass discipline applied to the MOT hot path.
     """
-    C = stage_constants(model, dtype)
-    x, P = bank.x, bank.P
-    if model.is_linear:
-        x_pred = jnp.einsum("ij,kj->ki", C.F, x)
-        FP = jnp.einsum("ij,kjl->kil", C.F, P)
-        P_pred = jnp.einsum("kil,jl->kij", FP, C.F) + C.Q
-    else:
-        x_pred = model.predict_mean(x)
-        Fk = model.jacobian(x)
-        FP = jnp.einsum("kij,kjl->kil", Fk, P)
-        P_pred = jnp.einsum("kil,kjl->kij", FP, Fk) + C.Q
-    z_pred = jnp.einsum("mi,ki->km", C.H, x_pred)
-    PHt = jnp.einsum("kij,mj->kim", P_pred, C.H)
-    S = jnp.einsum("mi,kij,nj->kmn", C.H, P_pred, C.H) + C.R
-    Sinv = small_inv(S, model.m)
+    x_pred, P_pred, z_pred, S, Sinv, PHt = _predict_lanes(
+        model, bank.x, bank.P, dtype)
     return bank._replace(x=x_pred, P=P_pred), z_pred, S, Sinv, PHt
 
 
@@ -104,12 +137,8 @@ def update_bank(model: FilterModel, bank: BankState, z: jnp.ndarray,
     if Sinv is None:
         S = jnp.einsum("mi,kij,nj->kmn", C.H, P_pred, C.H) + C.R
         Sinv = small_inv(S, model.m)
-    y = zk + jnp.einsum("mi,ki->km", C.H_neg, x_pred)
-    K = jnp.einsum("kim,kmn->kin", PHt, Sinv)
-    x_new = x_pred + jnp.einsum("kin,kn->ki", K, y)
-    HnP = jnp.einsum("mi,kij->kmj", C.H_neg, P_pred)
-    P_new = P_pred + jnp.einsum("kim,kmj->kij", K, HnP)
-    P_new = 0.5 * (P_new + jnp.swapaxes(P_new, -1, -2))
+    x_new, P_new = _kalman_update_lanes(model, x_pred, P_pred, zk, PHt, Sinv,
+                                        dtype)
 
     upd = has_z & bank.active
     x_out = jnp.where(upd[:, None], x_new, x_pred)
@@ -121,29 +150,41 @@ def update_bank(model: FilterModel, bank: BankState, z: jnp.ndarray,
     return bank._replace(x=x_out, P=P_out, hits=hits, misses=misses, age=age)
 
 
-def spawn_tracks(model: FilterModel, bank: BankState, z: jnp.ndarray,
-                 unassigned: jnp.ndarray, dtype=jnp.float32) -> BankState:
-    """Open new tracks for unassigned measurements in free slots.
-
-    z: (M, m); unassigned: (M,) bool. Deterministic packing: the j-th
-    unassigned measurement claims the j-th free slot (computed with
-    cumsum ranks — static shapes, no host round-trip).
-    """
-    Cap = bank.x.shape[0]
-    M = z.shape[0]
-    free = ~bank.active  # (Cap,)
+def _spawn_plan(active: jnp.ndarray, unassigned: jnp.ndarray):
+    """Deterministic free-slot packing: the j-th unassigned measurement
+    claims the j-th free slot (cumsum ranks — static shapes, no host
+    round-trip). Returns (take (Cap, M), takes_any (Cap,),
+    free_rank (Cap,))."""
+    free = ~active  # (Cap,)
     free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1       # rank among free
     meas_rank = jnp.cumsum(unassigned.astype(jnp.int32)) - 1  # rank among new
     # slot s takes measurement j iff free[s] and meas_rank[j]==free_rank[s]
     take = (free[:, None] & unassigned[None, :] &
             (free_rank[:, None] == meas_rank[None, :]))  # (Cap, M)
-    takes_any = take.any(axis=1)
+    return take, take.any(axis=1), free_rank
+
+
+def _spawn_init_state(model: FilterModel, take: jnp.ndarray, z: jnp.ndarray,
+                      dtype=jnp.float32):
+    """Measurement-seeded initial state per claiming slot: z mapped
+    through Hᵀ (exact for position-selector H), the unobserved state
+    components at the model defaults."""
     zsel = jnp.einsum("sm,mq->sq", take.astype(z.dtype), z)  # (Cap, m)
-    # init state: measurement mapped through H pseudo-placement (use H^T z
-    # — exact for position-selector H), rest of state at model defaults.
     Ht = jnp.asarray(model.H.T, dtype)
-    x_init = jnp.einsum("nm,sm->sn", Ht, zsel) + jnp.asarray(
-        model.x0, dtype) * (1.0 - jnp.einsum("nm,m->n", Ht, jnp.ones((model.m,), dtype)))
+    return jnp.einsum("nm,sm->sn", Ht, zsel) + jnp.asarray(
+        model.x0, dtype) * (1.0 - jnp.einsum("nm,m->n", Ht,
+                                             jnp.ones((model.m,), dtype)))
+
+
+def spawn_tracks(model: FilterModel, bank: BankState, z: jnp.ndarray,
+                 unassigned: jnp.ndarray, dtype=jnp.float32) -> BankState:
+    """Open new tracks for unassigned measurements in free slots.
+
+    z: (M, m); unassigned: (M,) bool.
+    """
+    Cap = bank.x.shape[0]
+    take, takes_any, free_rank = _spawn_plan(bank.active, unassigned)
+    x_init = _spawn_init_state(model, take, z, dtype)
     P_init = jnp.broadcast_to(jnp.asarray(model.P0, dtype),
                               (Cap, model.n, model.n))
     new_ids = bank.next_id + free_rank.astype(jnp.int32)
@@ -159,12 +200,136 @@ def spawn_tracks(model: FilterModel, bank: BankState, z: jnp.ndarray,
     )
 
 
-def prune_bank(bank: BankState, max_misses: int = 5) -> BankState:
-    """Retire tracks that coasted too long; their slots become free."""
+def prune_bank(bank, max_misses: int = 5):
+    """Retire tracks that coasted too long; their slots become free.
+    Works on BankState and IMMBankState alike (shared lifecycle
+    fields)."""
     dead = bank.active & (bank.misses > max_misses)
     return bank._replace(
         active=bank.active & ~dead,
         track_id=jnp.where(dead, -1, bank.track_id),
         hits=jnp.where(dead, 0, bank.hits),
         misses=jnp.where(dead, 0, bank.misses),
+    )
+
+
+# ---------------------------------------------------------------------------
+# IMM multi-model bank: K hypotheses per slot, shared lifecycle.
+# ---------------------------------------------------------------------------
+
+class IMMBankState(NamedTuple):
+    x: jnp.ndarray        # (K, C, n) model-conditioned state means
+    P: jnp.ndarray        # (K, C, n, n) model-conditioned covariances
+    mu: jnp.ndarray       # (C, K) mode probabilities (rows sum to 1)
+    active: jnp.ndarray   # (C,) bool
+    hits: jnp.ndarray     # (C,) int32 — consecutive associations
+    misses: jnp.ndarray   # (C,) int32 — consecutive misses
+    age: jnp.ndarray      # (C,) int32 — frames since spawn
+    track_id: jnp.ndarray  # (C,) int32 — stable external id (-1 = free)
+    next_id: jnp.ndarray  # () int32 — id counter
+
+
+def init_imm_bank(imm: IMMModel, capacity: int,
+                  dtype=jnp.float32) -> IMMBankState:
+    n, K = imm.n, imm.K
+    return IMMBankState(
+        x=jnp.zeros((K, capacity, n), dtype),
+        P=jnp.broadcast_to(jnp.asarray(imm.P0, dtype),
+                           (K, capacity, n, n)).copy(),
+        mu=jnp.broadcast_to(jnp.asarray(imm.mu0, dtype),
+                            (capacity, K)).copy(),
+        active=jnp.zeros((capacity,), bool),
+        hits=jnp.zeros((capacity,), jnp.int32),
+        misses=jnp.zeros((capacity,), jnp.int32),
+        age=jnp.zeros((capacity,), jnp.int32),
+        track_id=jnp.full((capacity,), -1, jnp.int32),
+        next_id=jnp.zeros((), jnp.int32),
+    )
+
+
+def predict_imm_bank(imm: IMMModel, bank: IMMBankState, dtype=jnp.float32):
+    """IMM interaction (mixing) + K model-conditioned time updates.
+
+    Returns (bank', z_pred (K, C, m), S (K, C, m, m), Sinv (K, C, m, m),
+    PHt (K, C, n, m), cbar (C, K)). Like ``predict_bank``, every
+    innovation quantity is produced exactly once per (model, frame):
+    gating, the measurement update AND the mode likelihoods all consume
+    these — K ``small_inv`` calls per frame, total, for K models.
+    ``cbar`` is the Markov-predicted mode probability (the coasting
+    posterior when a track gets no measurement)."""
+    Pi = jnp.asarray(imm.trans, dtype)
+    x_mix, P_mix, cbar = imm_mix(bank.x, bank.P, bank.mu, Pi)
+    outs = [_predict_lanes(model, x_mix[k], P_mix[k], dtype)
+            for k, model in enumerate(imm.models)]
+    x_pred, P_pred, z_pred, S, Sinv, PHt = (
+        jnp.stack([o[i] for o in outs]) for i in range(6))
+    return (bank._replace(x=x_pred, P=P_pred), z_pred, S, Sinv, PHt, cbar)
+
+
+def update_imm_bank(imm: IMMModel, bank: IMMBankState, z: jnp.ndarray,
+                    assoc: jnp.ndarray, z_pred: jnp.ndarray,
+                    PHt: jnp.ndarray, Sinv: jnp.ndarray, S: jnp.ndarray,
+                    cbar: jnp.ndarray, dtype=jnp.float32) -> IMMBankState:
+    """K model-conditioned measurement updates + the mode posterior.
+
+    z: (M, m) padded measurements; assoc: (C,) measurement index or -1.
+    z_pred/PHt/Sinv/S are the (K, ...) innovation quantities from
+    ``predict_imm_bank`` — nothing is rebuilt or re-inverted here; the
+    mode likelihoods reuse the same S^{-1} as the Kalman gains
+    (``gaussian_loglik``). Associated slots get the Bayes posterior
+    mu ∝ cbar·N(y; 0, S); coasting slots keep the Markov-predicted cbar
+    (which stays normalized — no renormalization drift while a track
+    coasts). Lifecycle counters advance once per slot, not per model.
+    """
+    m = imm.m
+    has_z = assoc >= 0
+    zk = z[jnp.clip(assoc, 0, z.shape[0] - 1)]  # (C, m), garbage where -1
+    x_new, P_new, loglik = [], [], []
+    for k, model in enumerate(imm.models):
+        xk, Pk = _kalman_update_lanes(model, bank.x[k], bank.P[k], zk,
+                                      PHt[k], Sinv[k], dtype)
+        x_new.append(xk)
+        P_new.append(Pk)
+        y = zk - z_pred[k]
+        loglik.append(gaussian_loglik(y, Sinv[k],
+                                      jnp.log(small_det(S[k], m)), m))
+    x_new, P_new = jnp.stack(x_new), jnp.stack(P_new)
+    mu_post = imm_mode_posterior(cbar, jnp.stack(loglik))
+
+    upd = has_z & bank.active
+    x_out = jnp.where(upd[None, :, None], x_new, bank.x)
+    P_out = jnp.where(upd[None, :, None, None], P_new, bank.P)
+    mu_out = jnp.where(upd[:, None], mu_post, cbar)
+    hits = jnp.where(upd, bank.hits + 1, bank.hits)
+    misses = jnp.where(upd, 0, jnp.where(bank.active, bank.misses + 1,
+                                         bank.misses))
+    age = jnp.where(bank.active, bank.age + 1, bank.age)
+    return bank._replace(x=x_out, P=P_out, mu=mu_out, hits=hits,
+                         misses=misses, age=age)
+
+
+def spawn_imm_tracks(imm: IMMModel, bank: IMMBankState, z: jnp.ndarray,
+                     unassigned: jnp.ndarray,
+                     dtype=jnp.float32) -> IMMBankState:
+    """Open new tracks for unassigned measurements: every mode starts
+    from the same measurement-seeded state, covariance P0 and the prior
+    mode distribution ``imm.mu0``."""
+    K = imm.K
+    Cap = bank.x.shape[1]
+    take, takes_any, free_rank = _spawn_plan(bank.active, unassigned)
+    x_init = _spawn_init_state(imm.models[0], take, z, dtype)  # shared H
+    P_init = jnp.broadcast_to(jnp.asarray(imm.P0, dtype),
+                              (Cap, imm.n, imm.n))
+    mu_init = jnp.broadcast_to(jnp.asarray(imm.mu0, dtype), (Cap, K))
+    new_ids = bank.next_id + free_rank.astype(jnp.int32)
+    return bank._replace(
+        x=jnp.where(takes_any[None, :, None], x_init[None], bank.x),
+        P=jnp.where(takes_any[None, :, None, None], P_init[None], bank.P),
+        mu=jnp.where(takes_any[:, None], mu_init, bank.mu),
+        active=bank.active | takes_any,
+        hits=jnp.where(takes_any, 1, bank.hits),
+        misses=jnp.where(takes_any, 0, bank.misses),
+        age=jnp.where(takes_any, 0, bank.age),
+        track_id=jnp.where(takes_any, new_ids, bank.track_id),
+        next_id=bank.next_id + jnp.sum(takes_any.astype(jnp.int32)),
     )

@@ -1,4 +1,4 @@
-"""Filter models: the paper's two workloads.
+"""Filter models: the paper's two workloads plus the IMM model set.
 
 LKF — constant-velocity, n=6 state [px,py,pz,vx,vy,vz], m=3 position
 measurements (paper §V: "3-D position and velocity").
@@ -9,14 +9,26 @@ EKF — constant-turn-rate-with-acceleration, n=8 state
 nonlinear (the EKF linearizes via the Jacobian F_k each step); the
 measurement map stays linear so the H_neg rewrite applies verbatim.
 
+Beyond the paper, the IMM (interacting multiple model) estimator runs
+K motion hypotheses per track as extra lanes of the same batched bank
+(paper §IV-D generalized: model index stacks onto the filter index).
+All IMM variants share one 9-dim state [px,py,pz,vx,vy,vz,ax,ay,az]
+and the m=3 position-selector H, so every variant stays on the
+selector-H matrix path of the ``katana_bank`` kernel:
+
+  CV9 — constant velocity (acceleration states pinned to zero),
+  CA9 — constant (Wiener-process) acceleration,
+  CT9 — coordinated turn at a fixed rate omega about the z axis
+        (exact linear discretization; one model per turn direction).
+
 All matrices are built once at model-construction time, mirroring the
-paper's constant folding: anything static (F, H, H_neg, their
+paper's constant folding (§IV-C): anything static (F, H, H_neg, their
 transposes, Q, R, I) is a trace-time constant.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -60,7 +72,8 @@ class FilterModel:
 
 def make_cv_lkf(dt: float = 1.0 / 30.0, q: float = 1e-2, r: float = 1e-1,
                 p0: float = 1.0) -> FilterModel:
-    """3-D constant-velocity LKF (paper's n=6 workload)."""
+    """3-D constant-velocity LKF (the paper's §V n=6 workload:
+    [p, v] state, position measurements, WNA process noise)."""
     n, m = 6, 3
     F = np.eye(n)
     F[:3, 3:] = dt * np.eye(3)
@@ -80,7 +93,8 @@ def make_cv_lkf(dt: float = 1.0 / 30.0, q: float = 1e-2, r: float = 1e-1,
 
 def make_ctra_ekf(dt: float = 1.0 / 30.0, q: float = 1e-2, r: float = 1e-1,
                   p0: float = 1.0) -> FilterModel:
-    """Constant-turn-rate + acceleration EKF (paper's n=8 workload).
+    """Constant-turn-rate + acceleration EKF (the paper's §V n=8
+    workload).
 
     State: [px, py, pz, v, theta, omega, a, vz]; first-order discretized
     CTRA dynamics (no omega->0 singularity; pure mul/add + sin/cos, in
@@ -165,9 +179,199 @@ def make_ctra_ekf(dt: float = 1.0 / 30.0, q: float = 1e-2, r: float = 1e-1,
     )
 
 
+# ---------------------------------------------------------------------------
+# IMM model set: K linear motion hypotheses on a shared 9-dim state.
+# ---------------------------------------------------------------------------
+
+IMM_STATE = ("px", "py", "pz", "vx", "vy", "vz", "ax", "ay", "az")
+
+
+def _pos_selector_H(n: int) -> np.ndarray:
+    """(3, n) position-selector measurement matrix (unit-vector rows, so
+    the katana_bank kernel's selector-H fast path applies)."""
+    H = np.zeros((3, n))
+    H[:, :3] = np.eye(3)
+    return H
+
+
+def make_cv9_lkf(dt: float = 1.0 / 30.0, q: float = 1e-2, r: float = 1e-1,
+                 p0: float = 1.0) -> FilterModel:
+    """Constant-velocity model embedded in the shared 9-dim IMM state.
+
+    The acceleration rows of F are zero — a CV-conditioned estimate
+    forgets whatever acceleration the IMM mixing step blended in, which
+    is exactly the "this target is NOT maneuvering" hypothesis.
+    Same discretized white-noise-acceleration Q as ``make_cv_lkf``.
+    """
+    n, m = 9, 3
+    F = np.zeros((n, n))
+    F[:6, :6] = np.eye(6)
+    F[:3, 3:6] = dt * np.eye(3)
+    G = np.zeros((n, 3))
+    G[:3] = 0.5 * dt * dt * np.eye(3)
+    G[3:6] = dt * np.eye(3)
+    Q = q * (G @ G.T) + 1e-9 * np.eye(n)
+    return FilterModel(
+        name="lkf-cv9", n=n, m=m, is_linear=True, F=F, H=_pos_selector_H(n),
+        Q=Q, R=r * np.eye(m), x0=np.zeros(n), P0=p0 * np.eye(n), dt=dt,
+    )
+
+
+def make_ca9_lkf(dt: float = 1.0 / 30.0, q: float = 0.5, r: float = 1e-1,
+                 p0: float = 1.0) -> FilterModel:
+    """Constant (Wiener-process) acceleration model on the 9-dim state:
+    p' = p + v dt + a dt^2/2; v' = v + a dt; a' = a, with white-noise
+    *jerk* process covariance (q is the jerk PSD — large, because this
+    is the maneuver hypothesis)."""
+    n, m = 9, 3
+    F = np.eye(n)
+    F[:3, 3:6] = dt * np.eye(3)
+    F[:3, 6:9] = 0.5 * dt * dt * np.eye(3)
+    F[3:6, 6:9] = dt * np.eye(3)
+    G = np.zeros((n, 3))
+    G[:3] = (dt ** 3 / 6.0) * np.eye(3)
+    G[3:6] = 0.5 * dt * dt * np.eye(3)
+    G[6:9] = dt * np.eye(3)
+    Q = q * (G @ G.T) + 1e-9 * np.eye(n)
+    return FilterModel(
+        name="lkf-ca9", n=n, m=m, is_linear=True, F=F, H=_pos_selector_H(n),
+        Q=Q, R=r * np.eye(m), x0=np.zeros(n), P0=p0 * np.eye(n), dt=dt,
+    )
+
+
+def make_ct9_lkf(omega: float, dt: float = 1.0 / 30.0, q: float = 1e-2,
+                 r: float = 1e-1, p0: float = 1.0) -> FilterModel:
+    """Coordinated-turn model (fixed known rate ``omega`` rad/s about
+    the z axis) on the 9-dim state. The exact linear discretization —
+    position integrates the rotating velocity in closed form:
+
+      p_xy' = p_xy + [[s/w, -(1-c)/w], [(1-c)/w, s/w]] v_xy
+      v_xy' = [[c, -s], [s, c]] v_xy           (s=sin(w dt), c=cos(w dt))
+
+    vz is constant-velocity; the acceleration rows are zero (the turn IS
+    the maneuver — no extra accel state needed). One model per turn
+    direction: build two CT9s with opposite omega signs."""
+    if omega == 0.0:
+        raise ValueError("omega must be nonzero; use make_cv9_lkf for w=0")
+    n, m = 9, 3
+    w = omega
+    s, c = np.sin(w * dt), np.cos(w * dt)
+    F = np.zeros((n, n))
+    F[:3, :3] = np.eye(3)
+    F[0, 3], F[0, 4] = s / w, -(1 - c) / w
+    F[1, 3], F[1, 4] = (1 - c) / w, s / w
+    F[2, 5] = dt
+    F[3, 3], F[3, 4] = c, -s
+    F[4, 3], F[4, 4] = s, c
+    F[5, 5] = 1.0
+    G = np.zeros((n, 3))
+    G[:3] = 0.5 * dt * dt * np.eye(3)
+    G[3:6] = dt * np.eye(3)
+    Q = q * (G @ G.T) + 1e-9 * np.eye(n)
+    return FilterModel(
+        name=f"lkf-ct9({omega:+.2f})", n=n, m=m, is_linear=True, F=F,
+        H=_pos_selector_H(n), Q=Q, R=r * np.eye(m), x0=np.zeros(n),
+        P0=p0 * np.eye(n), dt=dt,
+    )
+
+
+@dataclass(frozen=True, eq=False)  # identity hash: usable as jit static arg
+class IMMModel:
+    """K filter hypotheses + the Markov mode chain (the IMM estimator).
+
+    All member models must share (n, m) and the measurement matrix H —
+    that is what lets the K variants run as stacked lanes of ONE padded
+    ``katana_bank`` dispatch (the paper's §IV-D batching axis, reused
+    for the model index).
+
+    trans[i, j] = P(mode i -> mode j); rows sum to 1. mu0 is the spawn /
+    initial mode distribution.
+    """
+
+    name: str
+    models: Tuple[FilterModel, ...]
+    trans: np.ndarray  # (K, K) row-stochastic mode transition matrix
+    mu0: np.ndarray    # (K,) initial mode probabilities
+
+    def __post_init__(self):
+        K = len(self.models)
+        assert K >= 1
+        n, m = self.models[0].n, self.models[0].m
+        for mdl in self.models:
+            assert (mdl.n, mdl.m) == (n, m), "IMM models must share (n, m)"
+            assert np.array_equal(mdl.H, self.models[0].H), \
+                "IMM models must share H"
+        assert self.trans.shape == (K, K)
+        np.testing.assert_allclose(self.trans.sum(axis=1), 1.0, atol=1e-12)
+        np.testing.assert_allclose(self.mu0.sum(), 1.0, atol=1e-12)
+
+    @property
+    def K(self) -> int:
+        return len(self.models)
+
+    @property
+    def n(self) -> int:
+        return self.models[0].n
+
+    @property
+    def m(self) -> int:
+        return self.models[0].m
+
+    @property
+    def H(self) -> np.ndarray:
+        return self.models[0].H
+
+    @property
+    def x0(self) -> np.ndarray:
+        return self.models[0].x0
+
+    @property
+    def P0(self) -> np.ndarray:
+        return self.models[0].P0
+
+    @property
+    def dt(self) -> float:
+        return self.models[0].dt
+
+
+def as_imm(model) -> IMMModel:
+    """Wrap a single FilterModel as a degenerate K=1 IMM (the identity
+    mode chain). IMM with K=1 reduces exactly to the plain bank —
+    tested in tests/test_imm.py."""
+    if isinstance(model, IMMModel):
+        return model
+    return IMMModel(name=f"imm1-{model.name}", models=(model,),
+                    trans=np.ones((1, 1)), mu0=np.ones((1,)))
+
+
+def make_imm(dt: float = 1.0 / 30.0, omega: float = 0.7,
+             p_stay: float = 0.95, q_cv: float = 1e-2, q_ca: float = 0.5,
+             r: float = 1e-1, p0: float = 1.0) -> IMMModel:
+    """The default maneuvering-target IMM: CV9 + CA9 + CT9(±omega).
+
+    ``p_stay`` is the per-frame probability of keeping the current mode;
+    the remainder is spread uniformly over the other modes.
+    """
+    models = (
+        make_cv9_lkf(dt=dt, q=q_cv, r=r, p0=p0),
+        make_ca9_lkf(dt=dt, q=q_ca, r=r, p0=p0),
+        make_ct9_lkf(omega, dt=dt, r=r, p0=p0),
+        make_ct9_lkf(-omega, dt=dt, r=r, p0=p0),
+    )
+    K = len(models)
+    trans = np.full((K, K), (1.0 - p_stay) / (K - 1))
+    np.fill_diagonal(trans, p_stay)
+    return IMMModel(name="imm-cv-ca-ct9", models=models, trans=trans,
+                    mu0=np.full((K,), 1.0 / K))
+
+
 def get_filter(kind: str, dt: float = 1.0 / 30.0) -> FilterModel:
     if kind == "lkf":
         return make_cv_lkf(dt=dt)
     if kind == "ekf":
         return make_ctra_ekf(dt=dt)
+    if kind == "cv9":
+        return make_cv9_lkf(dt=dt)
+    if kind == "ca9":
+        return make_ca9_lkf(dt=dt)
     raise KeyError(f"unknown filter kind {kind!r}")

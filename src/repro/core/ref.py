@@ -67,3 +67,82 @@ def run_batched(model: FilterModel, zs: np.ndarray, x0: np.ndarray,
             xs[k], Ps[k] = step(model, xs[k], Ps[k], zs[t, k])
         out[t] = xs
     return out, xs, Ps
+
+
+# ---------------------------------------------------------------------------
+# IMM (interacting multiple model) oracle — the textbook recursion in
+# float64, one track at a time. The imm_bank stage / katana_bank_imm
+# kernel must track this, like every other stage tracks run().
+# ---------------------------------------------------------------------------
+
+def imm_step(imm, xs: np.ndarray, Ps: np.ndarray, mu: np.ndarray,
+             z: np.ndarray):
+    """One IMM cycle for one track.
+
+    xs: (K, n) model-conditioned means; Ps: (K, n, n); mu: (K,) mode
+    probabilities; z: (m,). Returns (xs', Ps', mu', x_combined).
+    Mixing -> per-model KF predict+update -> mode posterior from the
+    Gaussian measurement likelihoods -> moment-matched combination.
+    """
+    K = len(imm.models)
+    n, m = imm.n, imm.m
+    Pi = np.asarray(imm.trans, np.float64)
+    mu = np.asarray(mu, np.float64)
+    # -- interaction / mixing --
+    cbar = Pi.T @ mu                              # (K,) predicted mode probs
+    w = Pi * mu[:, None] / cbar[None, :]          # w[i, j] = P(i | j)
+    x_mix = np.einsum("ij,id->jd", w, xs)
+    P_mix = np.zeros((K, n, n))
+    for j in range(K):
+        for i in range(K):
+            dx = xs[i] - x_mix[j]
+            P_mix[j] += w[i, j] * (Ps[i] + np.outer(dx, dx))
+    # -- model-conditioned filtering + likelihoods --
+    xs_new = np.zeros((K, n))
+    Ps_new = np.zeros((K, n, n))
+    loglik = np.zeros(K)
+    for k, model in enumerate(imm.models):
+        x_pred, P_pred = predict(model, x_mix[k], P_mix[k])
+        H = np.asarray(model.H, np.float64)
+        R = np.asarray(model.R, np.float64)
+        y = np.asarray(z, np.float64) - H @ x_pred
+        S = H @ P_pred @ H.T + R
+        loglik[k] = -0.5 * (y @ np.linalg.solve(S, y)
+                            + np.log(np.linalg.det(S))
+                            + m * np.log(2.0 * np.pi))
+        xs_new[k], Ps_new[k] = update(model, x_pred, P_pred, z)
+    # -- mode posterior (shift-stable) --
+    wk = cbar * np.exp(loglik - loglik.max())
+    mu_new = wk / wk.sum()
+    x_c = mu_new @ xs_new
+    return xs_new, Ps_new, mu_new, x_c
+
+
+def run_imm(imm, zs: np.ndarray, x0=None, P0=None, mu0=None):
+    """IMM-filter a (T, m) measurement sequence.
+
+    Returns (combined states (T, n), mode probabilities (T, K))."""
+    K = len(imm.models)
+    x = np.tile(np.asarray(imm.x0 if x0 is None else x0, np.float64), (K, 1))
+    P = np.tile(np.asarray(imm.P0 if P0 is None else P0, np.float64),
+                (K, 1, 1))
+    mu = np.asarray(imm.mu0 if mu0 is None else mu0, np.float64)
+    out = np.zeros((len(zs), imm.n))
+    mus = np.zeros((len(zs), K))
+    for t, z in enumerate(zs):
+        x, P, mu, x_c = imm_step(imm, x, P, mu, z)
+        out[t] = x_c
+        mus[t] = mu
+    return out, mus
+
+
+def run_imm_batched(imm, zs: np.ndarray, x0: np.ndarray, P0: np.ndarray):
+    """zs: (T, N, m); x0: (N, n); P0: (N, n, n) -> combined (T, N, n)
+    and mode probabilities (T, N, K), each track an independent IMM."""
+    T, N, _ = zs.shape
+    K = len(imm.models)
+    out = np.zeros((T, N, imm.n))
+    mus = np.zeros((T, N, K))
+    for k in range(N):
+        out[:, k], mus[:, k] = run_imm(imm, zs[:, k], x0=x0[k], P0=P0[k])
+    return out, mus

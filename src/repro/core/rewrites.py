@@ -33,9 +33,20 @@ TPU-native beyond-paper batching:
                         inside the kernel with x/P VMEM-resident across
                         frames, instead of a per-frame pallas_call with
                         the covariance bank bouncing through HBM.
+  ``imm_bank``          Multi-model (IMM) estimation on the fused
+                        kernel: K motion hypotheses per track run as
+                        stacked lanes of one padded bank (the §IV-D
+                        batching axis reused for the model index), the
+                        per-lane kernel also emits the measurement
+                        log-likelihood from the SAME cofactor S^{-1} it
+                        computed for the Kalman gain, and the IMM
+                        mixing / mode-probability algebra (this module)
+                        closes the loop between frames — no inversion
+                        anywhere outside the kernel.
 
-Every stage is algebraically the same filter; tests assert equivalence
-against the float64 oracle in ``repro.core.ref``.
+Every stage is algebraically the same filter (``imm_bank`` with K=1
+degenerates to it exactly); tests assert equivalence against the
+float64 oracles in ``repro.core.ref``.
 """
 from __future__ import annotations
 
@@ -47,16 +58,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.filters import FilterModel
+from repro.core.filters import FilterModel, IMMModel, as_imm
 
 STAGES = ("baseline", "opt1", "opt2", "batched_blockdiag", "batched_lanes",
-          "fused_scan")
+          "fused_scan", "imm_bank")
 
 
 # ---------------------------------------------------------------------------
 # Closed-form small-matrix inversion (cofactor / Schur), batched-friendly.
-# Pure mul/add + one reciprocal — the TPU analogue of keeping the whole
-# update on the matrix pipeline (DESIGN.md §2).
+# Pure mul/add + one reciprocal — the TPU analogue of the paper's §IV-C
+# replacement of the generic inversion op, keeping the whole update on
+# the matrix pipeline (see docs/architecture.md).
 # ---------------------------------------------------------------------------
 
 def inv1(M):
@@ -118,6 +130,98 @@ def small_inv(M, dim: int):
     if dim in _SMALL_INV:
         return _SMALL_INV[dim](M)
     return jnp.linalg.inv(M)  # general fallback (not used by the paper dims)
+
+
+def small_det(M, dim: int):
+    """Closed-form determinant of a (..., dim, dim) batch, dim <= 4 —
+    pure mul/add (cofactor expansion; Schur product for dim=4), no
+    factorization. Used for the IMM mode likelihoods: the Gaussian
+    normalizer needs det(S), and this keeps it on the same
+    matrix-pipeline discipline as ``small_inv`` (paper §IV-C)."""
+    if dim == 1:
+        return M[..., 0, 0]
+    if dim == 2:
+        return M[..., 0, 0] * M[..., 1, 1] - M[..., 0, 1] * M[..., 1, 0]
+    if dim == 3:
+        m = [[M[..., i, j] for j in range(3)] for i in range(3)]
+        return (m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+                + m[0][1] * (m[1][2] * m[2][0] - m[1][0] * m[2][2])
+                + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0]))
+    if dim == 4:
+        D = M[..., 2:, 2:]
+        S = M[..., :2, :2] - M[..., :2, 2:] @ inv2(D) @ M[..., 2:, :2]
+        return small_det(D, 2) * small_det(S, 2)
+    return jnp.linalg.det(M)
+
+
+# ---------------------------------------------------------------------------
+# IMM mixing / mode-probability algebra (the "imm_bank" stage glue).
+# Shared by the tracker bank (repro.core.bank), the kernel sequence
+# runner (repro.kernels.katana_bank.ops) and the jnp oracle. Everything
+# is einsum/mul/add over a (K, B, ...) model-major layout — the same
+# static-shape discipline as the rest of the stage ladder.
+# ---------------------------------------------------------------------------
+
+_LOG_2PI = float(np.log(2.0 * np.pi))
+
+
+def imm_mix(x, P, mu, Pi):
+    """IMM interaction (mixing) step.
+
+    x: (K, B, n) model-conditioned means; P: (K, B, n, n); mu: (B, K)
+    mode probabilities; Pi: (K, K) row-stochastic transition matrix.
+    Returns (x_mix (K, B, n), P_mix (K, B, n, n), cbar (B, K)) where
+    cbar[b, j] = sum_i mu[b, i] Pi[i, j] is the predicted mode
+    probability. The spread term (x_i - x_mix_j)(x_i - x_mix_j)^T keeps
+    P_mix consistent (and PSD) under mode disagreement.
+    """
+    cbar = mu @ Pi                                           # (B, K)
+    # cbar_j = 0 (a mode the chain cannot reach, e.g. an identity
+    # transition with mu_j = 0) would divide 0/0 here; clamping the
+    # denominator keeps w finite and exactly 0 for that column, and the
+    # dead mode's posterior weight stays 0 via cbar in
+    # imm_mode_posterior — no NaN ever enters the track state.
+    cbar_safe = jnp.maximum(cbar, jnp.finfo(cbar.dtype).tiny)
+    w = mu[:, :, None] * Pi[None, :, :] / cbar_safe[:, None, :]  # (B, i, j)
+    x_mix = jnp.einsum("bij,ibd->jbd", w, x)
+    dx = x[:, None] - x_mix[None, :]                         # (i, j, B, n)
+    P_mix = (jnp.einsum("bij,ibuv->jbuv", w, P)
+             + jnp.einsum("bij,ijbu,ijbv->jbuv", w, dx, dx))
+    return x_mix, P_mix, cbar
+
+
+def imm_mode_posterior(cbar, loglik):
+    """Mode-probability update: mu'_k ∝ cbar_k exp(loglik_k), computed
+    shift-stably (the max log-likelihood is subtracted before exp, so
+    at least one mode always contributes a finite weight).
+
+    cbar: (B, K); loglik: (K, B) per-mode measurement log-likelihoods.
+    Returns mu' (B, K), rows summing to 1."""
+    ll = jnp.swapaxes(loglik, 0, 1)                          # (B, K)
+    w = cbar * jnp.exp(ll - ll.max(axis=1, keepdims=True))
+    return w / w.sum(axis=1, keepdims=True)
+
+
+def imm_combine(x, P, mu):
+    """Moment-matched combined estimate: x_c = sum_k mu_k x_k and the
+    mixture covariance with the spread term.
+
+    x: (K, B, n); P: (K, B, n, n); mu: (B, K) -> (x_c (B, n),
+    P_c (B, n, n))."""
+    x_c = jnp.einsum("bk,kbd->bd", mu, x)
+    dx = x - x_c[None]                                       # (K, B, n)
+    P_c = (jnp.einsum("bk,kbuv->buv", mu, P)
+           + jnp.einsum("bk,kbu,kbv->buv", mu, dx, dx))
+    return x_c, P_c
+
+
+def gaussian_loglik(y, Sinv, logdetS, m: int):
+    """log N(y; 0, S) from the innovation y (..., m), the precomputed
+    cofactor inverse Sinv (..., m, m) and log det S (...). No inversion
+    happens here — the whole point is to reuse the S^{-1} the Kalman
+    gain already paid for (predict_bank / the kernel's emitted Sinv)."""
+    d = jnp.einsum("...u,...uv,...v->...", y, Sinv, y)
+    return -0.5 * (d + logdetS + m * _LOG_2PI)
 
 
 # ---------------------------------------------------------------------------
@@ -394,6 +498,36 @@ def build_fused_scan(model: FilterModel, N: int, dtype=jnp.float32,
     return step, meta
 
 
+def build_imm_bank(model, N: int, dtype=jnp.float32,
+                   symmetrize: bool = True) -> Tuple[Callable, Dict]:
+    """The IMM multi-model bank as a stage. A plain FilterModel is
+    wrapped as a degenerate K=1 IMM (``as_imm``), so every single-model
+    workload is also a valid imm_bank workload.
+
+    Unlike the other stages the step carries mode probabilities:
+    ``step(x (K, N, n), P (K, N, n, n), z (N, m), mu (N, K)) ->
+    (x', P', mu')`` — one IMM cycle: mix -> fused multi-model kernel
+    (predict+update+log-likelihood, stacked lanes) -> mode posterior.
+    ``run_sequence`` adapts it to the canonical (N, n) layout by
+    combining the per-model estimates each frame.
+    """
+    from repro.kernels.katana_bank.ops import katana_bank_imm
+
+    imm = as_imm(model)
+    Pi = jnp.asarray(imm.trans, dtype)
+
+    def step(x, P, z, mu):
+        x_mix, P_mix, cbar = imm_mix(x, P, mu, Pi)
+        x_new, P_new, loglik = katana_bank_imm(imm, x_mix, P_mix, z,
+                                               symmetrize=symmetrize)
+        mu_new = imm_mode_posterior(cbar, loglik)
+        return x_new, P_new, mu_new
+
+    meta = dict(stage="imm_bank", layout="model-major", n=imm.n, m=imm.m,
+                N=N, K=imm.K)
+    return step, meta
+
+
 def build_stage(model: FilterModel, stage: str, N: Optional[int] = None,
                 dtype=jnp.float32, symmetrize: bool = False):
     """Uniform entry point; returns (step, meta)."""
@@ -412,6 +546,9 @@ def build_stage(model: FilterModel, stage: str, N: Optional[int] = None,
     if stage == "fused_scan":
         assert N is not None
         return build_fused_scan(model, N, dtype, symmetrize)
+    if stage == "imm_bank":
+        assert N is not None
+        return build_imm_bank(model, N, dtype, symmetrize)
     raise KeyError(f"unknown stage {stage!r}; known: {STAGES}")
 
 
@@ -461,6 +598,14 @@ def run_sequence(model: FilterModel, stage: str, zs, x0, P0,
         return katana_bank_sequence(model, zs, jnp.asarray(x0, dtype),
                                     jnp.asarray(P0, dtype),
                                     symmetrize=symmetrize)
+    if stage == "imm_bank":
+        # Multi-model stage: (x0, P0) seed every mode identically; the
+        # returned track is the moment-matched combined estimate.
+        from repro.kernels.katana_bank.ops import imm_bank_sequence
+
+        return imm_bank_sequence(as_imm(model), zs, jnp.asarray(x0, dtype),
+                                 jnp.asarray(P0, dtype),
+                                 symmetrize=symmetrize)
     step, _ = build_stage(model, stage, N=N, dtype=dtype, symmetrize=symmetrize)
 
     x, P, _ = canonical_to_stage(stage, jnp.asarray(x0, dtype),

@@ -17,19 +17,25 @@ The association cost is the squared Mahalanobis distance
 ``d = y^T S^{-1} y`` using the SAME cofactor inverse the update's
 Kalman gain uses — one ``small_inv`` per frame, total; the chi-square
 gate defaults to the 99% quantile for the measurement dimension.
+
+``imm_frame_step`` is the multi-model twin: K motion hypotheses per
+slot (see ``repro.core.bank.IMMBankState``), IMM mixing inside the
+predict, mode-probability-weighted gating, and K reused inverses per
+frame (one per model — still nothing inverted twice).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bank as bank_lib
-from repro.core.bank import BankState
-from repro.core.filters import FilterModel
+from repro.core.bank import BankState, IMMBankState
+from repro.core.filters import FilterModel, IMMModel
+from repro.core.rewrites import imm_combine
 
 # 99% chi-square quantiles by dof (m <= 6 covers the paper's workloads)
 CHI2_99 = {1: 6.63, 2: 9.21, 3: 11.34, 4: 13.28, 5: 15.09, 6: 16.81}
@@ -46,10 +52,13 @@ class TrackerConfig:
 
 
 class FrameResult(NamedTuple):
-    bank: BankState
+    bank: BankState           # BankState or IMMBankState
     assoc: jnp.ndarray        # (C,) measurement index per slot or -1
     unassigned: jnp.ndarray   # (M,) bool — measurements that spawned
     confirmed: jnp.ndarray    # (C,) bool — active & hits >= min_hits
+    # IMM extensions (None for the single-model frame step):
+    mode_probs: Optional[jnp.ndarray] = None  # (C, K) per-track mode probs
+    x_est: Optional[jnp.ndarray] = None       # (C, n) combined state means
 
 
 def mahalanobis_cost(z_pred: jnp.ndarray, Sinv: jnp.ndarray,
@@ -116,6 +125,45 @@ def frame_step(model: FilterModel, cfg: TrackerConfig, bank: BankState,
     return FrameResult(bank_f, assoc, unassigned, confirmed)
 
 
+def imm_frame_step(imm: IMMModel, cfg: TrackerConfig, bank: IMMBankState,
+                   z: jnp.ndarray, z_valid: jnp.ndarray) -> FrameResult:
+    """One IMM tracking frame (the multi-model ``frame_step``).
+
+    Same single-pass discipline: ``predict_imm_bank`` performs the IMM
+    mixing and produces every innovation quantity once per (model,
+    frame); gating, the K measurement updates AND the mode likelihoods
+    all reuse them (K ``small_inv`` calls per frame for K models —
+    nothing is inverted twice). Gating uses the mode-probability-
+    weighted Mahalanobis distance sum_k cbar_k · d_k, so a maneuver
+    hypothesis with high predicted probability widens the gate in the
+    right direction. ``FrameResult.mode_probs`` carries the per-track
+    mode posterior; ``FrameResult.x_est`` the moment-matched combined
+    state (use it instead of ``bank.x``, which is model-conditioned).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    gate = cfg.gate or CHI2_99.get(imm.m, 16.0)
+    bank_p, z_pred, S, Sinv, PHt, cbar = bank_lib.predict_imm_bank(
+        imm, bank, dtype)
+    zt = z.astype(dtype)
+    cost = sum(cbar[:, k, None] * mahalanobis_cost(z_pred[k], Sinv[k], zt)
+               for k in range(imm.K))
+    valid = bank_p.active[:, None] & z_valid[None, :]
+    rounds = min(cfg.capacity, cfg.max_meas)
+    assoc = greedy_assign(cost, valid, jnp.asarray(gate, dtype), rounds)
+    bank_u = bank_lib.update_imm_bank(imm, bank_p, zt, assoc, z_pred, PHt,
+                                      Sinv, S, cbar, dtype)
+    taken = jnp.zeros((cfg.max_meas,), bool).at[
+        jnp.clip(assoc, 0, cfg.max_meas - 1)
+    ].max(assoc >= 0)
+    unassigned = z_valid & ~taken
+    bank_s = bank_lib.spawn_imm_tracks(imm, bank_u, zt, unassigned, dtype)
+    bank_f = bank_lib.prune_bank(bank_s, cfg.max_misses)
+    confirmed = bank_f.active & (bank_f.hits >= cfg.min_hits)
+    x_est, _ = imm_combine(bank_f.x, bank_f.P, bank_f.mu)
+    return FrameResult(bank_f, assoc, unassigned, confirmed,
+                       mode_probs=bank_f.mu, x_est=x_est)
+
+
 def make_jitted_tracker(model: FilterModel, cfg: TrackerConfig):
     """Returns (init_bank, step) with step jitted over (bank, z, valid)."""
 
@@ -125,5 +173,20 @@ def make_jitted_tracker(model: FilterModel, cfg: TrackerConfig):
     @jax.jit
     def step(bank: BankState, z: jnp.ndarray, z_valid: jnp.ndarray):
         return frame_step(model, cfg, bank, z, z_valid)
+
+    return init, step
+
+
+def make_jitted_imm_tracker(imm: IMMModel, cfg: TrackerConfig):
+    """IMM twin of ``make_jitted_tracker``: (init, step) over an
+    IMMBankState — still one jittable call per frame."""
+
+    def init():
+        return bank_lib.init_imm_bank(imm, cfg.capacity,
+                                      jnp.dtype(cfg.dtype))
+
+    @jax.jit
+    def step(bank: IMMBankState, z: jnp.ndarray, z_valid: jnp.ndarray):
+        return imm_frame_step(imm, cfg, bank, z, z_valid)
 
     return init, step

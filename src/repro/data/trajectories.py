@@ -2,10 +2,14 @@
 
 Deterministic (seeded numpy) generators for
   * single-target measurement sequences per filter model (unit tests,
-    Table-I style benches), and
+    Table-I style benches),
   * multi-target MOT scenes with birth/death and clutter (tracker tests,
     the end-to-end example — the paper's Fig. 5 analogue without the
-    Haar-cascade frontend).
+    Haar-cascade frontend), and
+  * maneuvering targets that switch between straight / coordinated-turn
+    / accelerating segments — the model-mismatch regime the IMM bank is
+    built for (a single CV filter lags every maneuver; the IMM's CT/CA
+    hypotheses pick them up).
 """
 from __future__ import annotations
 
@@ -46,6 +50,68 @@ def batched_targets(model: FilterModel, T: int, N: int, seed: int = 0):
     for k in range(N):
         t, z = single_target(model, T, seed=seed * 100003 + k)
         truths.append(t)
+        zs.append(z)
+    return np.stack(truths, 1), np.stack(zs, 1)
+
+
+def maneuvering_target(T: int, dt: float = 1.0 / 30.0, seed: int = 0,
+                       speed: float = 3.0, omega: float = 0.7,
+                       accel: float = 2.0, meas_noise: float = 0.3,
+                       seg_len: int = 40) -> Tuple[np.ndarray, np.ndarray]:
+    """One target switching between CV / CT / CA motion segments.
+
+    The truth alternates randomly between straight flight, coordinated
+    turns (rate ±omega about z) and along-track acceleration bursts, in
+    segments of ~``seg_len`` frames — the classic IMM stress test:
+    every mode is exactly one of the IMM hypotheses, but a single CV
+    filter mis-models 2/3 of the trajectory.
+
+    Returns (truth (T, 9) in the IMM state layout [p, v, a],
+    z (T, 3) noisy position detections).
+    """
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(-5.0, 5.0, 3)
+    heading = rng.uniform(0, 2 * np.pi)
+    v = np.array([speed * np.cos(heading), speed * np.sin(heading), 0.0])
+    truth = np.zeros((T, 9))
+    zs = np.zeros((T, 3))
+    t = 0
+    while t < T:
+        mode = rng.choice(["cv", "ct+", "ct-", "ca+", "ca-"])
+        dur = int(rng.integers(seg_len // 2, seg_len + seg_len // 2))
+        w = omega if mode == "ct+" else -omega
+        for _ in range(min(dur, T - t)):
+            v_prev = v
+            if mode in ("ca+", "ca-"):
+                sp = np.linalg.norm(v[:2]) or 1.0
+                sign = 1.0 if mode == "ca+" else -1.0
+                # accelerate/brake along track (never through zero speed)
+                if sign < 0 and sp < 0.5 * speed:
+                    sign = 1.0
+                v = v + np.append(sign * accel * v[:2] / sp, 0.0) * dt
+            elif mode in ("ct+", "ct-"):
+                c, s = np.cos(w * dt), np.sin(w * dt)
+                v = np.array([c * v[0] - s * v[1], s * v[0] + c * v[1], v[2]])
+            p = p + v * dt
+            # truth acceleration = the realized dv/dt, so CT segments
+            # carry their (centripetal) acceleration, not zero
+            truth[t, :3], truth[t, 3:6] = p, v
+            truth[t, 6:9] = (v - v_prev) / dt
+            zs[t] = p + meas_noise * rng.normal(size=3)
+            t += 1
+            if t >= T:
+                break
+    return truth, zs
+
+
+def maneuvering_batch(T: int, N: int, seed: int = 0,
+                      **kw) -> Tuple[np.ndarray, np.ndarray]:
+    """(truth (T, N, 9), z (T, N, 3)) — N independent maneuvering
+    targets (the IMM benchmark workload)."""
+    truths, zs = [], []
+    for k in range(N):
+        tr, z = maneuvering_target(T, seed=seed * 100003 + k, **kw)
+        truths.append(tr)
         zs.append(z)
     return np.stack(truths, 1), np.stack(zs, 1)
 

@@ -1,7 +1,7 @@
 """katana_bank: fused batched Kalman predict+update Pallas TPU kernel.
 
-This is the TPU-native realization of KATANA's three rewrites
-(DESIGN.md §2):
+This is the TPU-native realization of KATANA's three rewrites (paper
+§IV-B/C/D; see docs/paper_mapping.md for the equation-level map):
 
   Opt-1 (subtract elimination)  -> signs folded into trace-time Python
         constants; the emitted op stream is mul/add only.
@@ -23,7 +23,7 @@ GEMM-only pipeline could not:
   * the CTRA Jacobian's sparsity (7 off-identity entries) makes
     F P F^T cost O(nnz·n) lane-ops instead of n^3.
 
-Two kernel shapes share the same emitted step math (``make_step_fn``):
+Three kernel shapes share the same emitted step math:
 
   ``make_kernel``       one predict+update per pallas_call (the
         original per-frame dispatch, still used for single-frame
@@ -36,10 +36,25 @@ Two kernel shapes share the same emitted step math (``make_step_fn``):
         are whole-T VMEM blocks, so T is VMEM-bounded on real hardware;
         ``ops.katana_bank_sequence`` chunks long streams over
         ``time_chunk``-sized dispatches, carrying (x, P) between them.
+  ``make_imm_kernel``   the IMM multi-model step: K motion hypotheses
+        run as stacked lanes of one padded bank. Per-model constant
+        tables (F, Q, R) are indexed inside the kernel: entries shared
+        by every model stay trace-time Python floats (fully folded,
+        zeros pruned), and the entries that differ are folded against
+        the static model->lane layout ON THE HOST (``plan_imm_tables``)
+        into one (E, lane) table input — inside the kernel a per-model
+        entry is a single table-row read, so the model "index" costs
+        zero arithmetic and the emitted stream stays pure mul/add on
+        the matrix path. The kernel additionally emits the per-lane
+        measurement log-likelihood from the SAME cofactor S^{-1} it
+        computed for the Kalman gain (plus a closed-form determinant) —
+        the IMM mode-probability update never inverts anything outside
+        the kernel.
 
 Layout: struct-of-arrays, lanes-minor —
   x (n, N), P (n, n, N), z (m, N) / zs (T, m, N); grid tiles N by
-  ``lane_tile``.
+  ``lane_tile``. For the IMM kernel the lane axis is the flattened
+  (model, track) product, model-major.
 """
 from __future__ import annotations
 
@@ -67,54 +82,57 @@ def _selector_rows(H: np.ndarray) -> Optional[List[int]]:
     return rows
 
 
-def _sym(M, n):
-    for i in range(n):
-        for j in range(i + 1, n):
-            v = 0.5 * (M[i][j] + M[j][i])
-            M[i][j] = v
-            M[j][i] = v
-    return M
-
-
 def _mat_from_np(A: np.ndarray):
     """Dense constant matrix -> python list-of-lists of floats (0 pruned
     at emit time)."""
     return [[float(v) for v in row] for row in A]
 
 
+def _is_zero(v) -> bool:
+    return isinstance(v, float) and v == 0.0
+
+
+def _bc(v, lane):
+    """Broadcast a constant-folded python float to a lane vector at a
+    store/stack boundary (all-zero F rows — e.g. the CV9/CT9 IMM models
+    forget their acceleration states — can fold a whole entry away)."""
+    return jnp.full_like(lane, v) if isinstance(v, (int, float)) else v
+
+
+def _emit_dot(row_consts, vec, n):
+    """sum_k row[k] * vec[k] with float/lane-vector entries on either
+    side; zero terms pruned, 1.0 coefficients elided. Returns 0.0 when
+    the whole row folds away."""
+    acc = None
+    for k in range(n):
+        f = row_consts[k]
+        if _is_zero(f) or _is_zero(vec[k]):
+            continue
+        if isinstance(f, float):
+            term = vec[k] if f == 1.0 else f * vec[k]
+        else:
+            term = f * vec[k]
+        acc = term if acc is None else acc + term
+    return 0.0 if acc is None else acc
+
+
+def _emit_matvec(F, xv, n):
+    """x' = F x on mixed float/lane-vector entries."""
+    return [_emit_dot(F[i], xv, n) for i in range(n)]
+
+
+def _emit_FP(F, P, n):
+    """FP = F · P on mixed float/lane-vector entries (zeros pruned) —
+    the shared first half of both F P Fᵀ emit paths."""
+    return [[_emit_dot(F[i], [P[k][j] for k in range(n)], n)
+             for j in range(n)] for i in range(n)]
+
+
 def _emit_FPFt(F, P, n):
     """P' = F P F^T with F a list-of-lists whose entries are python
     floats (constants) or lane vectors (jnp arrays); zeros pruned."""
-
-    def dot_row(i, col):
-        acc = None
-        for k in range(n):
-            f = F[i][k]
-            if isinstance(f, float):
-                if f == 0.0:
-                    continue
-                term = P[k][col] if f == 1.0 else f * P[k][col]
-            else:
-                term = f * P[k][col]
-            acc = term if acc is None else acc + term
-        return acc
-
-    FP = [[dot_row(i, j) for j in range(n)] for i in range(n)]
-
-    def dot_col(row, j):
-        acc = None
-        for k in range(n):
-            f = F[j][k]
-            if isinstance(f, float):
-                if f == 0.0:
-                    continue
-                term = FP[row][k] if f == 1.0 else f * FP[row][k]
-            else:
-                term = f * FP[row][k]
-            acc = term if acc is None else acc + term
-        return acc
-
-    return [[dot_col(i, j) for j in range(n)] for i in range(n)]
+    FP = _emit_FP(F, P, n)
+    return [[_emit_dot(F[j], FP[i], n) for j in range(n)] for i in range(n)]
 
 
 def _emit_small_inv(S, m):
@@ -175,23 +193,194 @@ def _emit_small_inv(S, m):
     raise NotImplementedError(m)
 
 
-def make_step_fn(model: FilterModel, symmetrize: bool = True):
-    """Emit one fused predict+update on lane vectors.
+def _emit_det(S, m):
+    """Closed-form determinant of an m x m matrix of lane vectors
+    (m <= 4) — cofactor expansion, pure mul/add. Feeds the Gaussian
+    normalizer of the IMM mode likelihood; the Mahalanobis part reuses
+    the S^{-1} already emitted for the Kalman gain, so the likelihood
+    adds zero inversions."""
+    if m == 1:
+        return S[0][0]
+    if m == 2:
+        return S[0][0] * S[1][1] - S[0][1] * S[1][0]
+    if m == 3:
+        return (S[0][0] * (S[1][1] * S[2][2] - S[1][2] * S[2][1])
+                + S[0][1] * (S[1][2] * S[2][0] - S[1][0] * S[2][2])
+                + S[0][2] * (S[1][0] * S[2][1] - S[1][1] * S[2][0]))
+    if m == 4:
+        # det = det(D) * det(A - B D^{-1} C), 2x2 blocks (Schur)
+        A = [[S[i][j] for j in range(2)] for i in range(2)]
+        B = [[S[i][j + 2] for j in range(2)] for i in range(2)]
+        C = [[S[i + 2][j] for j in range(2)] for i in range(2)]
+        D = [[S[i + 2][j + 2] for j in range(2)] for i in range(2)]
+        Di = _emit_small_inv(D, 2)
+        BDi = [[B[i][0] * Di[0][j] + B[i][1] * Di[1][j]
+                for j in range(2)] for i in range(2)]
+        Sc = [[A[i][j] - (BDi[i][0] * C[0][j] + BDi[i][1] * C[1][j])
+               for j in range(2)] for i in range(2)]
+        return _emit_det(D, 2) * _emit_det(Sc, 2)
+    raise NotImplementedError(m)
 
-    Returns ``step(xv, P, z) -> (x', P')`` where xv is a length-n list
-    of (lane,) vectors, P an n x n nested list of lane vectors, z a
-    length-m list. Shared by the per-frame kernel and the multi-frame
-    scan kernel so both dispatch shapes are numerically identical.
+
+def plan_imm_tables(models):
+    """Fold the per-model F/Q/R constant tables for the stacked-lane IMM
+    kernel.
+
+    Entries every model agrees on stay trace-time Python floats (fully
+    constant-folded, zeros pruned downstream — identical to the
+    single-model emit). Entries that differ get a row in the varying-
+    entry value matrix V (E, K): ops.py contracts V with the static
+    one-hot model-lane masks ON THE HOST, so the kernel receives one
+    (E, lane) table input and each varying entry is a single table-row
+    read — the per-lane model "indexing" costs zero arithmetic inside
+    the kernel (§IV-C constant folding, applied across models).
+
+    Returns (entries, V) where entries[name][i][j] is a float or
+    ("var", e) referencing row e of V.
     """
-    n, m = model.n, model.m
+    entries = {}
+    vals: List[np.ndarray] = []
+    for name in ("F", "Q", "R"):
+        Ms = [np.asarray(getattr(mdl, name), np.float64) for mdl in models]
+        a, b = Ms[0].shape
+        tabl = [[None] * b for _ in range(a)]
+        for i in range(a):
+            for j in range(b):
+                vs = [float(M[i, j]) for M in Ms]
+                if all(v == vs[0] for v in vs):
+                    tabl[i][j] = vs[0]
+                else:
+                    tabl[i][j] = ("var", len(vals))
+                    vals.append(np.array(vs))
+        entries[name] = tabl
+    V = np.zeros((max(1, len(vals)), len(models)))  # E >= 1: dummy row
+    for e, v in enumerate(vals):                    # keeps BlockSpecs static
+        V[e] = v
+    return entries, V
+
+
+def _resolve_mat(tabl, tab):
+    """Planned entry table -> float / lane-vector table, reading varying
+    entries out of the kernel's (E, lane) table input."""
+    return [[cell if isinstance(cell, float) else tab[cell[1]]
+             for cell in row] for row in tabl]
+
+
+_LOG_2PI = float(np.log(2.0 * np.pi))
+
+
+def _emit_add_Q(Pp, Q, n):
+    """P̂ += Q on mixed float/lane entries (zeros pruned)."""
+    for i in range(n):
+        for j in range(n):
+            if not _is_zero(Q[i][j]):
+                Pp[i][j] = Pp[i][j] + Q[i][j]
+    return Pp
+
+
+def _emit_predict_cov(F, P, Q, n, sym):
+    """P̂ = F P Fᵀ + Q. With ``sym`` (the symmetrize=True contract) only
+    the upper triangle is emitted and the mirror entries alias it —
+    exact for symmetric P (covariance propagation is symmetric in exact
+    arithmetic), and it cuts the dominant n² cost of the step to
+    n(n+1)/2 while enforcing symmetry for free (no averaging pass)."""
+    if not sym:
+        return _emit_add_Q(_emit_FPFt(F, P, n), Q, n)
+    FP = _emit_FP(F, P, n)
+    Pp = [[None] * n for _ in range(n)]
+    for i in range(n):
+        for j in range(i, n):
+            v = _emit_dot(F[j], FP[i], n)
+            if not _is_zero(Q[i][j]):
+                v = v + Q[i][j]
+            Pp[i][j] = Pp[j][i] = v
+    return Pp
+
+
+def _emit_update(xp, Pp, z, R, obs, n, m, symmetrize, with_loglik):
+    """The fused measurement update on lane vectors (paper §IV-B/C):
+    subtract-free innovation (sign folded at trace time), selector-H
+    covariance selection instead of H P Hᵀ GEMMs, cofactor S^{-1}.
+    Under ``symmetrize`` the posterior covariance is emitted
+    upper-triangle-only with aliased mirrors (exact symmetry, ~half the
+    covariance-update ops).
+
+    With ``with_loglik`` also emits log N(y; 0, S) per lane from the
+    same S^{-1} (+ a closed-form det) — the IMM mode likelihood.
+    """
+    # y = z + H_neg x̂  (Opt-1: sign folded at trace time)
+    y = [z[r] - xp[obs[r]] for r in range(m)]
+    # S = P[obs][obs] + R — pure selection
+    S = [[Pp[obs[r]][obs[c]] + R[r][c] if not _is_zero(R[r][c])
+          else Pp[obs[r]][obs[c]] for c in range(m)] for r in range(m)]
+    PHt = [[Pp[i][obs[r]] for r in range(m)] for i in range(n)]
+    Sinv = _emit_small_inv(S, m)
+    K = [[None] * m for _ in range(n)]
+    for i in range(n):
+        for r in range(m):
+            acc = None
+            for c in range(m):
+                t = PHt[i][c] * Sinv[c][r]
+                acc = t if acc is None else acc + t
+            K[i][r] = acc
+    # x' = x̂ + K y
+    xn = []
+    for i in range(n):
+        acc = xp[i]
+        for r in range(m):
+            acc = acc + K[i][r] * y[r]
+        xn.append(acc)
+    # P' = P̂ + K (H_neg P̂) = P̂ - K P̂[obs, :]
+    Pn = [[None] * n for _ in range(n)]
+    for i in range(n):
+        cols = range(i, n) if symmetrize else range(n)
+        for j in cols:
+            acc = Pp[i][j]
+            for r in range(m):
+                acc = acc - K[i][r] * Pp[obs[r]][j]
+            Pn[i][j] = acc
+            if symmetrize:
+                Pn[j][i] = acc  # exact symmetry by aliasing, no averaging
+    if not with_loglik:
+        return xn, Pn
+    # Mahalanobis distance via the S^{-1} above — no second inversion
+    d = None
+    for r in range(m):
+        Sy = None
+        for c in range(m):
+            t = Sinv[r][c] * y[c]
+            Sy = t if Sy is None else Sy + t
+        t = y[r] * Sy
+        d = t if d is None else d + t
+    loglik = -0.5 * (d + jnp.log(_emit_det(S, m)) + m * _LOG_2PI)
+    return xn, Pn, loglik
+
+
+def _check_selector(model: FilterModel) -> List[int]:
     obs = _selector_rows(np.asarray(model.H))
     if obs is None:
         raise NotImplementedError(
             "katana_bank requires a selector measurement matrix (every row "
             "of H a unit vector, true for both paper workloads); for a "
             "general dense H use the 'batched_lanes' rewrite stage instead.")
-    Qnp = np.asarray(model.Q, np.float64)
-    Rnp = np.asarray(model.R, np.float64)
+    return obs
+
+
+def make_step_fn(model: FilterModel, symmetrize: bool = True,
+                 with_loglik: bool = False):
+    """Emit one fused predict+update on lane vectors.
+
+    Returns ``step(xv, P, z) -> (x', P')`` where xv is a length-n list
+    of (lane,) vectors, P an n x n nested list of lane vectors, z a
+    length-m list (``with_loglik`` appends the per-lane measurement
+    log-likelihood). Shared by the per-frame kernel, the multi-frame
+    scan kernel and the K=1 IMM degenerate case, so all dispatch shapes
+    are numerically identical.
+    """
+    n, m = model.n, model.m
+    obs = _check_selector(model)
+    Qtab = _mat_from_np(np.asarray(model.Q, np.float64))
+    Rtab = _mat_from_np(np.asarray(model.R, np.float64))
     Fnp = np.asarray(model.F, np.float64)
     dt = float(model.dt)
     is_linear = model.is_linear
@@ -200,18 +389,9 @@ def make_step_fn(model: FilterModel, symmetrize: bool = True):
         # ---- predict ----
         if is_linear:
             F = _mat_from_np(Fnp)
-            xp = []
-            for i in range(n):
-                acc = None
-                for j in range(n):
-                    f = F[i][j]
-                    if f == 0.0:
-                        continue
-                    t = xv[j] if f == 1.0 else f * xv[j]
-                    acc = t if acc is None else acc + t
-                xp.append(acc)
+            xp = _emit_matvec(F, xv, n)
         else:
-            # CTRA-8: [px,py,pz,v,th,om,a,vz] (paper EKF workload)
+            # CTRA-8: [px,py,pz,v,th,om,a,vz] (paper EKF workload §V)
             px, py, pz, v, th, om, a, vz = xv
             c, s = jnp.cos(th), jnp.sin(th)
             xp = [px + v * c * dt, py + v * s * dt, pz + vz * dt,
@@ -224,47 +404,45 @@ def make_step_fn(model: FilterModel, symmetrize: bool = True):
             F[2][7] = dt
             F[3][6] = dt
             F[4][5] = dt
-        Pp = _emit_FPFt(F if not is_linear else _mat_from_np(Fnp), P, n)
-        for i in range(n):
-            for j in range(n):
-                q = float(Qnp[i, j])
-                if q != 0.0:
-                    Pp[i][j] = Pp[i][j] + q
+        Pp = _emit_predict_cov(F, P, Qtab, n, symmetrize)
+        return _emit_update(xp, Pp, z, Rtab, obs, n, m, symmetrize,
+                            with_loglik)
 
-        # ---- update (selector-H: S is covariance selection, no GEMM) ----
-        # y = z + H_neg x̂  (Opt-1: sign folded at trace time)
-        y = [z[r] - xp[obs[r]] for r in range(m)]
-        # S = P[obs][obs] + R — pure selection
-        S = [[Pp[obs[r]][obs[c]] + float(Rnp[r, c]) for c in range(m)]
-             for r in range(m)]
-        PHt = [[Pp[i][obs[r]] for r in range(m)] for i in range(n)]
-        Sinv = _emit_small_inv(S, m)
-        K = [[None] * m for _ in range(n)]
-        for i in range(n):
-            for r in range(m):
-                acc = None
-                for c in range(m):
-                    t = PHt[i][c] * Sinv[c][r]
-                    acc = t if acc is None else acc + t
-                K[i][r] = acc
-        # x' = x̂ + K y
-        xn = []
-        for i in range(n):
-            acc = xp[i]
-            for r in range(m):
-                acc = acc + K[i][r] * y[r]
-            xn.append(acc)
-        # P' = P̂ + K (H_neg P̂) = P̂ - K P̂[obs, :]
-        Pn = [[None] * n for _ in range(n)]
-        for i in range(n):
-            for j in range(n):
-                acc = Pp[i][j]
-                for r in range(m):
-                    acc = acc - K[i][r] * Pp[obs[r]][j]
-                Pn[i][j] = acc
-        if symmetrize:
-            Pn = _sym(Pn, n)
-        return xn, Pn
+    return step
+
+
+def make_imm_step_fn(models, symmetrize: bool = True):
+    """Emit one fused multi-model predict+update+log-likelihood.
+
+    ``step(xv, P, z, tab) -> (x', P', loglik)`` where ``tab`` is the
+    length-E list of (lane,) folded varying-constant rows (see
+    ``plan_imm_tables``): shared F/Q/R entries stay trace-time floats,
+    per-model entries are direct table-row reads — the model index
+    never leaves the matrix path and costs no runtime arithmetic. K=1
+    delegates to ``make_step_fn`` (bitwise the plain bank, which is
+    what makes the IMM degenerate case exact).
+    """
+    if len(models) == 1:
+        base = make_step_fn(models[0], symmetrize, with_loglik=True)
+        return lambda xv, P, z, tab: base(xv, P, z)
+    n, m = models[0].n, models[0].m
+    obs = _check_selector(models[0])
+    for mdl in models:
+        if not mdl.is_linear:
+            raise NotImplementedError(
+                "multi-model katana_bank_imm requires linear member models "
+                "(constant F tables); got " + mdl.name)
+        assert (mdl.n, mdl.m) == (n, m)
+        assert _check_selector(mdl) == obs
+    entries, _ = plan_imm_tables(models)
+
+    def step(xv, P, z, tab):
+        F = _resolve_mat(entries["F"], tab)
+        Q = _resolve_mat(entries["Q"], tab)
+        R = _resolve_mat(entries["R"], tab)
+        xp = _emit_matvec(F, xv, n)
+        Pp = _emit_predict_cov(F, P, Q, n, symmetrize)
+        return _emit_update(xp, Pp, z, R, obs, n, m, symmetrize, True)
 
     return step
 
@@ -279,10 +457,35 @@ def make_kernel(model: FilterModel, symmetrize: bool = True):
         P = [[P_ref[i, j, :] for j in range(n)] for i in range(n)]
         z = [z_ref[i, :] for i in range(m)]
         xn, Pn = step(xv, P, z)
+        lane = x_ref[0, :]
         for i in range(n):
-            x_out[i, :] = xn[i]
+            x_out[i, :] = _bc(xn[i], lane)
             for j in range(n):
-                P_out[i, j, :] = Pn[i][j]
+                P_out[i, j, :] = _bc(Pn[i][j], lane)
+
+    return kernel
+
+
+def make_imm_kernel(models, symmetrize: bool = True):
+    """Build the multi-model (IMM) Pallas kernel body: the per-frame
+    predict+update over K-model stacked lanes, plus the per-lane
+    measurement log-likelihood output used by the IMM mode-probability
+    update (paper §IV-D batching, reused for the model axis)."""
+    n, m = models[0].n, models[0].m
+    step = make_imm_step_fn(models, symmetrize)
+
+    def kernel(x_ref, P_ref, z_ref, tab_ref, x_out, P_out, ll_out):
+        xv = [x_ref[i, :] for i in range(n)]
+        P = [[P_ref[i, j, :] for j in range(n)] for i in range(n)]
+        z = [z_ref[i, :] for i in range(m)]
+        tab = [tab_ref[e, :] for e in range(tab_ref.shape[0])]
+        xn, Pn, ll = step(xv, P, z, tab)
+        lane = x_ref[0, :]
+        for i in range(n):
+            x_out[i, :] = _bc(xn[i], lane)
+            for j in range(n):
+                P_out[i, j, :] = _bc(Pn[i][j], lane)
+        ll_out[0, :] = _bc(ll, lane)
 
     return kernel
 
@@ -306,6 +509,11 @@ def make_scan_kernel(model: FilterModel, T: int, symmetrize: bool = True):
             zt = zs_ref[pl.ds(t, 1)]  # (1, m, lane)
             z = [zt[0, r, :] for r in range(m)]
             xn, Pn = step(xv, P, z)
+            lane = x_ref[0, :]
+            # broadcast any constant-folded entries so the fori_loop
+            # carry keeps a uniform (lane,)-vector structure
+            xn = [_bc(v, lane) for v in xn]
+            Pn = [[_bc(v, lane) for v in row] for row in Pn]
             xs_out[pl.ds(t, 1)] = jnp.stack(xn)[None]
             return xn, Pn
 
@@ -348,6 +556,45 @@ def katana_bank_step(model: FilterModel, x, P, z, lane_tile: int = LANE_TILE,
         ],
         interpret=interpret,
     )(x, P, z)
+
+
+@functools.partial(jax.jit, static_argnames=("imm", "lane_tile",
+                                             "symmetrize", "interpret"))
+def katana_bank_imm_step(imm, x, P, z, tab, lane_tile: int = LANE_TILE,
+                         symmetrize: bool = True, interpret: bool = True):
+    """Multi-model fused step over stacked lanes.
+
+    x: (n, L); P: (n, n, L); z: (m, L); tab: (E, L) host-folded
+    varying-constant table (``plan_imm_tables`` x the one-hot model
+    masks) — lanes-minor (SoA), L = K·N flattened model-major (ops.py
+    packs and pads). Returns (x' (n, L), P' (n, n, L), loglik (1, L))."""
+    n, m = imm.n, imm.m
+    E = tab.shape[0]
+    L = x.shape[-1]
+    assert L % lane_tile == 0, (L, lane_tile)
+    grid = (L // lane_tile,)
+    kern = make_imm_kernel(imm.models, symmetrize)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((n, n, lane_tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((m, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((E, lane_tile), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, lane_tile), lambda i: (0, i)),
+            pl.BlockSpec((n, n, lane_tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((1, lane_tile), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, L), x.dtype),
+            jax.ShapeDtypeStruct((n, n, L), P.dtype),
+            jax.ShapeDtypeStruct((1, L), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, P, z, tab)
 
 
 @functools.partial(jax.jit, static_argnames=("model", "lane_tile",

@@ -1,13 +1,23 @@
 """jit'd wrappers for the katana_bank kernels: canonical (N, n) layout
 in, lane-packed (n, N) SoA inside, padding N to the lane tile.
 
-Two dispatch granularities:
+Dispatch granularities:
   ``katana_bank``          one predict+update per call (per-frame).
   ``katana_bank_sequence`` a whole (T, N, m) measurement stream in ONE
         pallas_call — the AoS->SoA transposes and lane padding are paid
         once per sequence instead of once per frame, and x/P stay
         kernel-resident across frames (the time loop is inside the
         kernel, see kernel.make_scan_kernel).
+  ``katana_bank_imm``      one IMM multi-model predict+update+loglik
+        per call: the K model hypotheses of N tracks flatten to K·N
+        stacked lanes of a single padded dispatch (model-major); each
+        lane's F/Q/R constants come from a host-folded per-lane table
+        indexed inside the kernel (see kernel.plan_imm_tables).
+  ``imm_bank_sequence``    a full IMM cycle per frame under one jitted
+        lax.scan: mix -> katana_bank_imm -> mode posterior. The mixing
+        runs between kernel dispatches (fusing it INTO the scan kernel
+        is a ROADMAP open item), so this is per-frame dispatch — the
+        layout work is still once per frame, not once per sequence.
 
 ``interpret=True`` everywhere in this container (CPU); on a real TPU
 pass interpret=False — the kernels and BlockSpecs are TPU-shaped.
@@ -18,12 +28,16 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.filters import FilterModel
+from repro.core.filters import FilterModel, IMMModel
+from repro.core.rewrites import imm_combine, imm_mix, imm_mode_posterior
 from repro.kernels.katana_bank.kernel import (
     LANE_TILE,
+    katana_bank_imm_step,
     katana_bank_scan_step,
     katana_bank_step,
+    plan_imm_tables,
 )
 
 
@@ -103,3 +117,102 @@ def katana_bank_soa(model: FilterModel, x, P, z, **kw):
     """SoA entry point for callers that keep the lane layout end-to-end
     (the serving engine's resident bank)."""
     return katana_bank_step(model, x, P, z, **kw)
+
+
+def _imm_lane_table(imm: IMMModel, N: int, L_pad: int,
+                    dtype=np.float32) -> np.ndarray:
+    """(E, L_pad) host-folded varying-constant table for the model-major
+    lane layout: plan_imm_tables' per-model values contracted with the
+    (static) one-hot model masks in numpy at trace time — the kernel's
+    per-lane "model index" is a finished constant before dispatch.
+    Padding lanes get model 0's values so their (discarded) algebra
+    stays finite — zeros would fold S to 0 and the emitted 1/det to
+    inf."""
+    K = imm.K
+    _, V = plan_imm_tables(imm.models)  # (E, K)
+    sel = np.zeros((K, L_pad), np.float64)
+    for k in range(K):
+        sel[k, k * N:(k + 1) * N] = 1.0
+    sel[0, K * N:] = 1.0
+    return (V @ sel).astype(dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("imm", "lane_tile", "symmetrize",
+                                    "interpret"))
+def katana_bank_imm(imm: IMMModel, x, P, z, lane_tile: int = LANE_TILE,
+                    symmetrize: bool = True, interpret: bool = True):
+    """Fused multi-model (IMM) KF step + measurement log-likelihoods.
+
+    x: (K, N, n) model-conditioned means (typically the IMM-mixed
+    states); P: (K, N, n, n); z: (N, m) — every model sees the same
+    measurement. Returns (x' (K, N, n), P' (K, N, n, n),
+    loglik (K, N)).
+
+    The (model, track) product flattens model-major onto the lane axis
+    — K·N lanes, padded to the lane tile — so K hypotheses cost one
+    kernel dispatch, exactly like K·N plain filters (paper §IV-D's
+    batching argument applied to the model index).
+    """
+    K, N, n = x.shape
+    m = z.shape[-1]
+    L = K * N
+    L_pad = -(-L // lane_tile) * lane_tile
+    xs = _pad_to(x.reshape(L, n).T, L_pad)
+    Ps = _pad_to(P.reshape(L, n, n).transpose(1, 2, 0), L_pad)
+    zs = _pad_to(jnp.tile(z, (K, 1)).T, L_pad)
+    tab = jnp.asarray(_imm_lane_table(imm, N, L_pad, dtype=x.dtype))
+    x2, P2, ll = katana_bank_imm_step(imm, xs, Ps, zs, tab,
+                                      lane_tile=lane_tile,
+                                      symmetrize=symmetrize,
+                                      interpret=interpret)
+    return (x2[:, :L].T.reshape(K, N, n),
+            P2[:, :, :L].transpose(2, 0, 1).reshape(K, N, n, n),
+            ll[0, :L].reshape(K, N))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("imm", "lane_tile", "symmetrize",
+                                    "interpret", "return_final"))
+def imm_bank_sequence(imm: IMMModel, zs, x0, P0, mu0=None,
+                      lane_tile: int = LANE_TILE, symmetrize: bool = True,
+                      interpret: bool = True, return_final: bool = False):
+    """IMM-filter a (T, N, m) measurement stream: one jitted lax.scan,
+    one fused multi-model kernel dispatch per frame.
+
+    zs: (T, N, m); x0: (N, n); P0: (N, n, n) seed every mode
+    identically; mu0: (N, K) initial mode probabilities (defaults to
+    ``imm.mu0``). Returns xs (T, N, n) — the moment-matched combined
+    estimate after every frame. With ``return_final=True`` also returns
+    ``(x (K, N, n), P (K, N, n, n), mu (N, K))`` for chunked streaming.
+
+    Per frame: IMM mixing (einsum algebra from ``repro.core.rewrites``)
+    -> ``katana_bank_imm`` (predict+update+loglik, stacked lanes) ->
+    mode posterior from the kernel's log-likelihoods. Mixing between
+    dispatches is the one remaining HBM round-trip; fusing it into the
+    scan kernel is a ROADMAP open item.
+    """
+    zs = jnp.asarray(zs)
+    T, N, m = zs.shape
+    K, n = imm.K, imm.n
+    x = jnp.broadcast_to(jnp.asarray(x0)[None], (K, N, n))
+    P = jnp.broadcast_to(jnp.asarray(P0)[None], (K, N, n, n))
+    mu = (jnp.broadcast_to(jnp.asarray(imm.mu0, zs.dtype), (N, K))
+          if mu0 is None else jnp.asarray(mu0))
+    Pi = jnp.asarray(imm.trans, zs.dtype)
+
+    def body(carry, z_t):
+        x, P, mu = carry
+        x_mix, P_mix, cbar = imm_mix(x, P, mu, Pi)
+        x_new, P_new, ll = katana_bank_imm(imm, x_mix, P_mix, z_t,
+                                           lane_tile=lane_tile,
+                                           symmetrize=symmetrize,
+                                           interpret=interpret)
+        mu_new = imm_mode_posterior(cbar, ll)
+        x_c, _ = imm_combine(x_new, P_new, mu_new)
+        return (x_new, P_new, mu_new), x_c
+
+    (x, P, mu), xs_out = jax.lax.scan(body, (x, P, mu), zs)
+    if return_final:
+        return xs_out, (x, P, mu)
+    return xs_out

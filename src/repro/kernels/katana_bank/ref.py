@@ -1,11 +1,18 @@
-"""Pure-jnp oracle for the katana_bank kernel: the batched_lanes rewrite
-(itself validated against the float64 numpy oracle in core/ref.py)."""
+"""Pure-jnp oracles for the katana_bank kernels.
+
+``katana_bank_ref`` is the batched_lanes rewrite (itself validated
+against the float64 numpy oracle in core/ref.py); ``katana_imm_ref``
+is the multi-model step: per-model batched_lanes + the Gaussian
+measurement log-likelihood, in plain einsum form — what the stacked-lane
+IMM kernel must reproduce per lane.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.filters import FilterModel
-from repro.core.rewrites import build_batched_lanes
+from repro.core.filters import FilterModel, IMMModel
+from repro.core.rewrites import (build_batched_lanes, gaussian_loglik,
+                                 small_det)
 
 
 def katana_bank_ref(model: FilterModel, x, P, z, symmetrize: bool = True):
@@ -13,3 +20,35 @@ def katana_bank_ref(model: FilterModel, x, P, z, symmetrize: bool = True):
     step, _ = build_batched_lanes(model, x.shape[0], dtype=x.dtype,
                                   symmetrize=symmetrize)
     return step(x, P, z)
+
+
+def katana_imm_ref(imm: IMMModel, x, P, z, symmetrize: bool = True):
+    """Multi-model step oracle: x (K, N, n); P (K, N, n, n); z (N, m).
+
+    Returns (x' (K, N, n), P' (K, N, n, n), loglik (K, N)) — each model
+    filtered independently on the shared measurement through the SAME
+    einsum helpers the IMM tracker bank uses
+    (``bank._predict_lanes`` / ``bank._kalman_update_lanes``), which is
+    exactly what the kernel's table-folded constants must compute
+    lane-for-lane. The log-likelihood uses the same cofactor
+    S^{-1}/det algebra (``small_inv``/``small_det``) as the emitted
+    kernel.
+    """
+    from repro.core.bank import _kalman_update_lanes, _predict_lanes
+
+    m = imm.m
+    xs, Ps, lls = [], [], []
+    for k, model in enumerate(imm.models):
+        x_pred, P_pred, z_pred, S, Sinv, PHt = _predict_lanes(
+            model, x[k], P[k], x.dtype)
+        x_new, P_new = _kalman_update_lanes(model, x_pred, P_pred, z, PHt,
+                                            Sinv, x.dtype)
+        if not symmetrize:
+            # _kalman_update_lanes always symmetrizes; the kernels only
+            # do so under the symmetrize contract
+            raise NotImplementedError("katana_imm_ref is symmetrize-only")
+        xs.append(x_new)
+        Ps.append(P_new)
+        lls.append(gaussian_loglik(z - z_pred, Sinv,
+                                   jnp.log(small_det(S, m)), m))
+    return jnp.stack(xs), jnp.stack(Ps), jnp.stack(lls)

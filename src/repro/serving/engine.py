@@ -22,10 +22,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bank import BankState, init_bank
-from repro.core.filters import FilterModel
-from repro.core.tracker import TrackerConfig, frame_step
-from repro.kernels.katana_bank.ops import katana_bank_sequence
+from repro.core.bank import BankState, init_bank, init_imm_bank
+from repro.core.filters import FilterModel, IMMModel
+from repro.core.tracker import TrackerConfig, frame_step, imm_frame_step
+from repro.kernels.katana_bank.ops import (imm_bank_sequence,
+                                           katana_bank_sequence)
 
 
 @dataclass
@@ -34,6 +35,9 @@ class TrackSnapshot:
     state: np.ndarray
     hits: int
     age: int
+    # IMM engines only: per-mode probabilities (K,), aligned with
+    # model.models; None for single-model engines
+    mode_probs: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -58,15 +62,29 @@ class EngineStats:
 
 class TrackingEngine:
     """Single-sensor engine: submit measurements per frame, get
-    confirmed tracks back."""
+    confirmed tracks back.
 
-    def __init__(self, model: FilterModel, cfg: Optional[TrackerConfig] = None):
+    Accepts a plain FilterModel or an IMMModel — an IMM engine runs the
+    multi-model frame step (K hypotheses per slot) and reports the
+    moment-matched combined state plus per-mode probabilities in every
+    snapshot; the serving surface is otherwise identical."""
+
+    def __init__(self, model, cfg: Optional[TrackerConfig] = None):
         self.model = model
         self.cfg = cfg or TrackerConfig()
-        self.bank = init_bank(model, self.cfg.capacity,
-                              jnp.dtype(self.cfg.dtype))
-        self._step = jax.jit(
-            lambda bank, z, valid: frame_step(model, self.cfg, bank, z, valid))
+        self.is_imm = isinstance(model, IMMModel)
+        if self.is_imm:
+            self.bank = init_imm_bank(model, self.cfg.capacity,
+                                      jnp.dtype(self.cfg.dtype))
+            self._step = jax.jit(
+                lambda bank, z, valid: imm_frame_step(model, self.cfg, bank,
+                                                      z, valid))
+        else:
+            self.bank = init_bank(model, self.cfg.capacity,
+                                  jnp.dtype(self.cfg.dtype))
+            self._step = jax.jit(
+                lambda bank, z, valid: frame_step(model, self.cfg, bank, z,
+                                                  valid))
         self.stats = EngineStats()
         # warm the compile so serving latency excludes tracing
         z0 = jnp.zeros((self.cfg.max_meas, model.m), jnp.float32)
@@ -90,11 +108,16 @@ class TrackingEngine:
         self.bank = res.bank
         conf = np.asarray(res.confirmed)
         ids = np.asarray(self.bank.track_id)
-        xs = np.asarray(self.bank.x)
+        # IMM: report the combined (moment-matched) state, not the
+        # model-conditioned bank.x
+        xs = np.asarray(res.x_est if res.x_est is not None else self.bank.x)
+        mus = (np.asarray(res.mode_probs) if res.mode_probs is not None
+               else None)
         hits = np.asarray(self.bank.hits)
         age = np.asarray(self.bank.age)
         return [TrackSnapshot(int(ids[i]), xs[i].copy(), int(hits[i]),
-                              int(age[i]))
+                              int(age[i]),
+                              mus[i].copy() if mus is not None else None)
                 for i in np.nonzero(conf)[0]]
 
     def replay(self, zs: np.ndarray, x0: Optional[np.ndarray] = None,
@@ -109,7 +132,8 @@ class TrackingEngine:
         ``katana_bank_sequence`` with x/P kernel-resident across
         frames. Returns the (T, N, n) filtered states. Does not touch
         the live bank, and is accounted under the replay_* stats so the
-        real-time serving fps stays meaningful.
+        real-time serving fps stays meaningful. IMM engines replay
+        through ``imm_bank_sequence`` (combined estimates out).
         """
         zs = np.asarray(zs, np.float32)
         T, N, m = zs.shape
@@ -117,10 +141,11 @@ class TrackingEngine:
             x0 = np.tile(self.model.x0, (N, 1)).astype(np.float32)
         if P0 is None:
             P0 = np.tile(self.model.P0, (N, 1, 1)).astype(np.float32)
+        seq = imm_bank_sequence if self.is_imm else katana_bank_sequence
         t0 = time.perf_counter()
-        out = katana_bank_sequence(self.model, jnp.asarray(zs),
-                                   jnp.asarray(x0, jnp.float32),
-                                   jnp.asarray(P0, jnp.float32))
+        out = seq(self.model, jnp.asarray(zs),
+                  jnp.asarray(x0, jnp.float32),
+                  jnp.asarray(P0, jnp.float32))
         out.block_until_ready()
         self.stats.replay_latency_s += time.perf_counter() - t0
         self.stats.replay_frames += T

@@ -27,6 +27,49 @@ def test_greedy_assign_respects_gate():
     assert assoc.tolist() == [-1]
 
 
+def test_greedy_assign_all_gated_out():
+    """Valid pairs whose costs all exceed the gate associate nothing."""
+    cost = jnp.asarray([[20.0, 30.0], [25.0, 40.0]])
+    valid = jnp.ones((2, 2), bool)
+    assoc = greedy_assign(cost, valid, jnp.asarray(10.0), 2)
+    assert assoc.tolist() == [-1, -1]
+
+
+def test_greedy_assign_zero_valid_measurements():
+    """No valid measurement (empty frame) -> every slot unassigned,
+    regardless of how cheap the costs look."""
+    cost = jnp.zeros((3, 2))
+    valid = jnp.zeros((3, 2), bool)
+    assoc = greedy_assign(cost, valid, jnp.asarray(100.0), 2)
+    assert assoc.tolist() == [-1, -1, -1]
+
+
+def test_greedy_assign_more_measurements_than_slots():
+    """C < M: the single slot takes the global-min measurement; the
+    rest stay unassigned (they spawn)."""
+    cost = jnp.asarray([[5.0, 1.0, 3.0]])
+    valid = jnp.ones((1, 3), bool)
+    assoc = greedy_assign(cost, valid, jnp.asarray(100.0), 1)
+    assert assoc.tolist() == [1]
+
+
+def test_greedy_assign_more_slots_than_measurements():
+    """M < C: only the best slot wins the lone measurement."""
+    cost = jnp.asarray([[3.0], [1.0], [2.0]])
+    valid = jnp.ones((3, 1), bool)
+    assoc = greedy_assign(cost, valid, jnp.asarray(100.0), 1)
+    assert assoc.tolist() == [-1, 0, -1]
+
+
+def test_greedy_assign_tie_break_is_deterministic():
+    """Equal costs: argmin over the flattened (row-major) cost commits
+    the lowest (slot, measurement) pair first — stable across runs."""
+    cost = jnp.ones((2, 2))
+    valid = jnp.ones((2, 2), bool)
+    assoc = greedy_assign(cost, valid, jnp.asarray(100.0), 2)
+    assert assoc.tolist() == [0, 1]
+
+
 @given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 2**31 - 1))
 @settings(max_examples=25, deadline=None)
 def test_greedy_assign_is_matching(C, M, seed):
