@@ -17,12 +17,18 @@ study, arXiv:2411.16930):
          hypotheses as stacked lanes of one padded dispatch: both
          configurations occupy the same 256 padded lanes, so the ratio
          is pure emitted-op count.
-       * ``sequence`` rows time the end-to-end drivers
-         (``katana_bank_sequence``'s one-dispatch fused scan vs
-         ``imm_bank_sequence``'s per-frame scan). The IMM pays per-frame
-         dispatch + AoS<->SoA packing because the mixing step runs
-         between dispatches — fusing the mixing INTO the scan kernel is
-         the ROADMAP open item this gap motivates.
+       * ``sequence`` rows time the end-to-end drivers:
+         ``katana_bank_sequence``'s one-dispatch fused scan,
+         ``imm_bank_sequence``'s per-frame IMM scan (mix -> kernel ->
+         posterior, one dispatch + packing PER FRAME), and
+         ``katana_imm_sequence``'s fused IMM scan (``imm_scan`` stage:
+         mixing and mode posterior inside the kernel's time loop, ONE
+         dispatch per sequence). ``speedup_imm_scan_vs_per_frame`` is
+         the headline: the dispatch-granularity win the fusion buys.
+       * ``tracker`` rows time the full jitted MOT frame step — gating
+         + greedy assignment + lifecycle included —
+         ``frame_step`` (single-model cv9) vs ``imm_frame_step`` (K=4):
+         the end-to-end serving cost of multi-model estimation.
 
 Results land in BENCH_imm.json. Interpret-mode numbers (CPU container)
 overweight per-op dispatch overhead relative to TPU silicon; the
@@ -40,21 +46,24 @@ import numpy as np
 
 from benchmarks.common import time_fn
 from repro.core.filters import get_filter, make_cv9_lkf, make_imm
+from repro.core.tracker import (TrackerConfig, make_jitted_imm_tracker,
+                                make_jitted_tracker)
 from repro.data.trajectories import maneuvering_batch
 from repro.kernels.katana_bank.kernel import (katana_bank_imm_step,
                                               katana_bank_step)
 from repro.kernels.katana_bank.ops import (_imm_lane_table, _pad_to,
                                            imm_bank_sequence,
-                                           katana_bank_sequence)
+                                           katana_bank_sequence,
+                                           katana_imm_sequence)
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_imm.json"
 
 WARMUP_FRAMES = 20  # RMSE excludes the initial convergence transient
 
 
-def _pos_rmse(est: np.ndarray, truth: np.ndarray) -> float:
+def _pos_rmse(est: np.ndarray, truth: np.ndarray, warm: int) -> float:
     return float(np.sqrt(np.mean(
-        (est[WARMUP_FRAMES:, :, :3] - truth[WARMUP_FRAMES:, :, :3]) ** 2)))
+        (est[warm:, :, :3] - truth[warm:, :, :3]) ** 2)))
 
 
 def _soa_state(model, N: int, L: int, seed: int):
@@ -73,6 +82,7 @@ def run(csv: List[str], N: int = 64, T: int = 96) -> None:
     cv9 = make_cv9_lkf()
     imm = make_imm()
     K = imm.K
+    warm = min(WARMUP_FRAMES, T // 4)  # smoke shapes have no transient room
 
     truth, zs = maneuvering_batch(T, N, seed=1)
     zsf = jnp.asarray(zs, jnp.float32)
@@ -87,12 +97,15 @@ def run(csv: List[str], N: int = 64, T: int = 96) -> None:
     est_cv6 = np.asarray(katana_bank_sequence(cv6, zsf, x6, P6))
     est_cv9 = np.asarray(katana_bank_sequence(cv9, zsf, x9, P9))
     est_imm = np.asarray(imm_bank_sequence(imm, zsf, x9, P9))
+    est_imm_scan = np.asarray(katana_imm_sequence(imm, zsf, x9, P9))
+    np.testing.assert_allclose(est_imm_scan, est_imm, atol=5e-4, rtol=5e-4)
     rmse = dict(
         measurements=float(np.sqrt(np.mean(
-            (zs[WARMUP_FRAMES:] - truth[WARMUP_FRAMES:, :, :3]) ** 2))),
-        cv6=_pos_rmse(est_cv6, truth),
-        cv9=_pos_rmse(est_cv9, truth),
-        imm=_pos_rmse(est_imm, truth),
+            (zs[warm:] - truth[warm:, :, :3]) ** 2))),
+        cv6=_pos_rmse(est_cv6, truth, warm),
+        cv9=_pos_rmse(est_cv9, truth, warm),
+        imm=_pos_rmse(est_imm, truth, warm),
+        imm_scan=_pos_rmse(est_imm_scan, truth, warm),
     )
     for k, v in rmse.items():
         csv.append(f"imm/rmse/{k}/N={N},0,rmse={v:.4f}")
@@ -120,20 +133,55 @@ def run(csv: List[str], N: int = 64, T: int = 96) -> None:
     seq_fns = {
         "cv9_sequence": (lambda: katana_bank_sequence(cv9, zsf, x9, P9)),
         "imm_sequence": (lambda: imm_bank_sequence(imm, zsf, x9, P9)),
+        "imm_scan_sequence": (lambda: katana_imm_sequence(imm, zsf, x9, P9)),
     }
     for name, fn in seq_fns.items():
-        sec = time_fn(fn, iters=3, warmup=1)
+        # best-of-rounds: min is robust to the container's noisy
+        # scheduler (same protocol as the kernel rows)
+        sec = min(time_fn(fn, iters=3, warmup=1) for _ in range(5))
         timings[name] = dict(us_per_frame=sec / T * 1e6,
                              steps_per_sec=T / sec)
         csv.append(f"imm/{name}/N={N},{sec / T * 1e6:.1f},"
                    f"steps_per_sec={T / sec:.1f}")
 
+    # ---- throughput: full tracker frame (gating + assignment included) ----
+    cfg = TrackerConfig(capacity=max(2 * N, 16), max_meas=max(N, 8))
+    z_frame = np.zeros((cfg.max_meas, 3), np.float32)
+    z_frame[:N] = zs[T // 2]
+    v_frame = np.zeros((cfg.max_meas,), bool)
+    v_frame[:N] = True
+    zj, vj = jnp.asarray(z_frame), jnp.asarray(v_frame)
+    tracker_fns = {}
+    for name, (init, step) in (
+            ("cv9_tracker", make_jitted_tracker(cv9, cfg)),
+            ("imm_tracker", make_jitted_imm_tracker(imm, cfg))):
+        bank = init()
+        for t in range(3):  # seed + confirm tracks before timing
+            bank = step(bank, zj, vj).bank
+        tracker_fns[name] = (lambda step=step, bank=bank:
+                             step(bank, zj, vj).bank.x)
+    for name, fn in tracker_fns.items():
+        sec = min(time_fn(fn, iters=10, warmup=2) for _ in range(3))
+        timings[name] = dict(us_per_frame=sec * 1e6, steps_per_sec=1.0 / sec)
+        csv.append(f"imm/{name}/N={N},{sec * 1e6:.1f},"
+                   f"steps_per_sec={1.0 / sec:.1f}")
+
     ratio_kernel = (timings["imm_kernel"]["steps_per_sec"]
                     / timings["cv9_kernel"]["steps_per_sec"])
     ratio_seq = (timings["imm_sequence"]["steps_per_sec"]
                  / timings["cv9_sequence"]["steps_per_sec"])
+    ratio_scan = (timings["imm_scan_sequence"]["steps_per_sec"]
+                  / timings["cv9_sequence"]["steps_per_sec"])
+    speedup_fused = (timings["imm_scan_sequence"]["steps_per_sec"]
+                     / timings["imm_sequence"]["steps_per_sec"])
+    ratio_tracker = (timings["imm_tracker"]["steps_per_sec"]
+                     / timings["cv9_tracker"]["steps_per_sec"])
     csv.append(f"imm/ratio_kernel_imm_vs_cv9/N={N},0,x{ratio_kernel:.2f}")
     csv.append(f"imm/ratio_sequence_imm_vs_cv9/N={N},0,x{ratio_seq:.2f}")
+    csv.append(f"imm/ratio_imm_scan_vs_cv9/N={N},0,x{ratio_scan:.2f}")
+    csv.append(f"imm/speedup_imm_scan_vs_per_frame/N={N},0,"
+               f"x{speedup_fused:.2f}")
+    csv.append(f"imm/ratio_tracker_imm_vs_cv9/N={N},0,x{ratio_tracker:.2f}")
 
     BENCH_JSON.write_text(json.dumps(dict(
         bench="imm", mode="interpret", N=N, T=T, K=K,
@@ -143,9 +191,16 @@ def run(csv: List[str], N: int = 64, T: int = 96) -> None:
         timings=timings,
         ratio_kernel_imm_vs_cv9=ratio_kernel,
         ratio_sequence_imm_vs_cv9=ratio_seq,
+        ratio_imm_scan_vs_cv9=ratio_scan,
+        speedup_imm_scan_vs_per_frame=speedup_fused,
+        ratio_tracker_imm_vs_cv9=ratio_tracker,
         notes=("kernel rows: SoA-resident dispatch, equal padded lane "
                "count — the portable cost of K hypotheses as stacked "
-               "lanes. sequence rows: imm pays per-frame dispatch + "
-               "packing because mixing runs between dispatches "
-               "(fusing it into the scan kernel is a ROADMAP item)."),
+               "lanes. sequence rows: imm_sequence pays per-frame "
+               "dispatch + packing (mixing between dispatches); "
+               "imm_scan_sequence fuses mixing + mode posterior into "
+               "the scan kernel's time loop — one dispatch per "
+               "sequence (speedup_imm_scan_vs_per_frame). tracker rows: "
+               "the full jitted MOT frame step incl. gating + greedy "
+               "assignment."),
     ), indent=2) + "\n")

@@ -3,7 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV lines (0 in the us column for
 pure-analysis rows).
 
-  PYTHONPATH=src python -m benchmarks.run [--only table1,fig4,...]
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig4,...] [--smoke]
+
+``--smoke`` runs the drivers that accept shape parameters at tiny
+shapes (T<=8, a handful of tracks) — the CI benchmark-smoke job uses it
+to prove every driver still imports, runs and writes its BENCH json
+without paying full benchmark time. Smoke numbers are NOT meaningful
+perf data; don't commit the resulting json.
 """
 from __future__ import annotations
 
@@ -15,10 +21,17 @@ from typing import List
 ALL = ("accuracy", "fig4", "batching", "table1", "roofline", "scan_fusion",
        "imm")
 
+SMOKE_KWARGS = {
+    "scan_fusion": dict(Ns=(8,), T=8),
+    "imm": dict(N=4, T=8),
+}
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=",".join(ALL))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes: exercise the drivers, not the perf")
     args = ap.parse_args(argv)
     wanted = [w for w in args.only.split(",") if w]
     csv: List[str] = []
@@ -26,7 +39,7 @@ def main(argv=None) -> None:
     for name in wanted:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            mod.run(csv)
+            mod.run(csv, **(SMOKE_KWARGS.get(name, {}) if args.smoke else {}))
         except Exception as e:  # noqa: BLE001
             failed.append((name, repr(e)))
             traceback.print_exc()

@@ -308,6 +308,25 @@ def update_imm_bank(imm: IMMModel, bank: IMMBankState, z: jnp.ndarray,
                          misses=misses, age=age)
 
 
+def replay_imm_bank(imm: IMMModel, bank: IMMBankState, zs, valid=None,
+                    **kw):
+    """Re-filter a pre-associated (T, C, m) measurement stream seeded
+    from the live bank's mode-conditioned state — one fused IMM scan
+    dispatch per time chunk (the ``imm_scan`` stage), with x/P and the
+    mode probabilities kernel-resident across frames.
+
+    ``valid`` is an optional (T, C) mask: False frames coast a slot
+    (time update only, mu <- cbar), mirroring how ``update_imm_bank``
+    treats an unassociated slot. Returns the (T, C, n) moment-matched
+    combined estimates; pass ``return_final=True`` through ``kw`` to
+    also get the final (x, P, mu) for reseeding a bank. The live bank
+    is not modified."""
+    from repro.kernels.katana_bank.ops import katana_imm_sequence
+
+    return katana_imm_sequence(imm, zs, bank.x, bank.P, mu0=bank.mu,
+                               valid=valid, **kw)
+
+
 def spawn_imm_tracks(imm: IMMModel, bank: IMMBankState, z: jnp.ndarray,
                      unassigned: jnp.ndarray,
                      dtype=jnp.float32) -> IMMBankState:

@@ -76,13 +76,17 @@ def run_batched(model: FilterModel, zs: np.ndarray, x0: np.ndarray,
 # ---------------------------------------------------------------------------
 
 def imm_step(imm, xs: np.ndarray, Ps: np.ndarray, mu: np.ndarray,
-             z: np.ndarray):
+             z: np.ndarray, has_z: bool = True):
     """One IMM cycle for one track.
 
     xs: (K, n) model-conditioned means; Ps: (K, n, n); mu: (K,) mode
     probabilities; z: (m,). Returns (xs', Ps', mu', x_combined).
     Mixing -> per-model KF predict+update -> mode posterior from the
     Gaussian measurement likelihoods -> moment-matched combination.
+    With ``has_z=False`` the track coasts: the measurement update is
+    skipped (the model-conditioned states stay at the prediction) and
+    the mode posterior is the Markov-predicted cbar — the tracker's
+    no-measurement semantics (``bank.update_imm_bank``).
     """
     K = len(imm.models)
     n, m = imm.n, imm.m
@@ -103,6 +107,9 @@ def imm_step(imm, xs: np.ndarray, Ps: np.ndarray, mu: np.ndarray,
     loglik = np.zeros(K)
     for k, model in enumerate(imm.models):
         x_pred, P_pred = predict(model, x_mix[k], P_mix[k])
+        if not has_z:
+            xs_new[k], Ps_new[k] = x_pred, P_pred
+            continue
         H = np.asarray(model.H, np.float64)
         R = np.asarray(model.R, np.float64)
         y = np.asarray(z, np.float64) - H @ x_pred
@@ -111,17 +118,22 @@ def imm_step(imm, xs: np.ndarray, Ps: np.ndarray, mu: np.ndarray,
                             + np.log(np.linalg.det(S))
                             + m * np.log(2.0 * np.pi))
         xs_new[k], Ps_new[k] = update(model, x_pred, P_pred, z)
-    # -- mode posterior (shift-stable) --
-    wk = cbar * np.exp(loglik - loglik.max())
-    mu_new = wk / wk.sum()
+    # -- mode posterior (shift-stable; coasting keeps the prediction) --
+    if has_z:
+        wk = cbar * np.exp(loglik - loglik.max())
+        mu_new = wk / wk.sum()
+    else:
+        mu_new = cbar
     x_c = mu_new @ xs_new
     return xs_new, Ps_new, mu_new, x_c
 
 
-def run_imm(imm, zs: np.ndarray, x0=None, P0=None, mu0=None):
+def run_imm(imm, zs: np.ndarray, x0=None, P0=None, mu0=None, valid=None):
     """IMM-filter a (T, m) measurement sequence.
 
-    Returns (combined states (T, n), mode probabilities (T, K))."""
+    ``valid``, if given, is a (T,) boolean mask — False frames coast
+    (predict only, mu <- cbar). Returns (combined states (T, n), mode
+    probabilities (T, K))."""
     K = len(imm.models)
     x = np.tile(np.asarray(imm.x0 if x0 is None else x0, np.float64), (K, 1))
     P = np.tile(np.asarray(imm.P0 if P0 is None else P0, np.float64),
@@ -130,19 +142,24 @@ def run_imm(imm, zs: np.ndarray, x0=None, P0=None, mu0=None):
     out = np.zeros((len(zs), imm.n))
     mus = np.zeros((len(zs), K))
     for t, z in enumerate(zs):
-        x, P, mu, x_c = imm_step(imm, x, P, mu, z)
+        has_z = True if valid is None else bool(valid[t])
+        x, P, mu, x_c = imm_step(imm, x, P, mu, z, has_z=has_z)
         out[t] = x_c
         mus[t] = mu
     return out, mus
 
 
-def run_imm_batched(imm, zs: np.ndarray, x0: np.ndarray, P0: np.ndarray):
+def run_imm_batched(imm, zs: np.ndarray, x0: np.ndarray, P0: np.ndarray,
+                    valid=None):
     """zs: (T, N, m); x0: (N, n); P0: (N, n, n) -> combined (T, N, n)
-    and mode probabilities (T, N, K), each track an independent IMM."""
+    and mode probabilities (T, N, K), each track an independent IMM.
+    ``valid``: optional (T, N) boolean coasting mask (see run_imm)."""
     T, N, _ = zs.shape
     K = len(imm.models)
     out = np.zeros((T, N, imm.n))
     mus = np.zeros((T, N, K))
     for k in range(N):
-        out[:, k], mus[:, k] = run_imm(imm, zs[:, k], x0=x0[k], P0=P0[k])
+        out[:, k], mus[:, k] = run_imm(
+            imm, zs[:, k], x0=x0[k], P0=P0[k],
+            valid=None if valid is None else valid[:, k])
     return out, mus

@@ -43,10 +43,20 @@ TPU-native beyond-paper batching:
                         mixing / mode-probability algebra (this module)
                         closes the loop between frames — no inversion
                         anywhere outside the kernel.
+  ``imm_scan``          Sequence-level IMM fusion: the mixing and
+                        mode-posterior algebra move INSIDE the scan
+                        kernel's time loop, so a whole K-hypothesis
+                        stream over T frames is ONE Pallas dispatch with
+                        x/P and the mode probabilities VMEM-resident
+                        across frames (``make_imm_scan_kernel`` /
+                        ``katana_imm_sequence``). The Markov transition
+                        matrix and every per-model constant fold at
+                        trace time; K=1 reduces exactly (bitwise) to
+                        ``fused_scan``.
 
-Every stage is algebraically the same filter (``imm_bank`` with K=1
-degenerates to it exactly); tests assert equivalence against the
-float64 oracles in ``repro.core.ref``.
+Every stage is algebraically the same filter (``imm_bank``/``imm_scan``
+with K=1 degenerate to it exactly); tests assert equivalence against
+the float64 oracles in ``repro.core.ref``.
 """
 from __future__ import annotations
 
@@ -61,7 +71,7 @@ import numpy as np
 from repro.core.filters import FilterModel, IMMModel, as_imm
 
 STAGES = ("baseline", "opt1", "opt2", "batched_blockdiag", "batched_lanes",
-          "fused_scan", "imm_bank")
+          "fused_scan", "imm_bank", "imm_scan")
 
 
 # ---------------------------------------------------------------------------
@@ -528,6 +538,29 @@ def build_imm_bank(model, N: int, dtype=jnp.float32,
     return step, meta
 
 
+def build_imm_scan(model, N: int, dtype=jnp.float32,
+                   symmetrize: bool = True) -> Tuple[Callable, Dict]:
+    """The fused IMM scan as a stage: same step signature as
+    ``imm_bank`` (``step(x, P, z, mu) -> (x', P', mu')``), but the whole
+    cycle — mixing, the K predict+updates, the mode posterior — runs
+    inside ONE scan-kernel dispatch (at T=1 here; ``run_sequence``
+    dispatches the whole stream at once). K=1 reduces exactly to
+    ``fused_scan``."""
+    from repro.kernels.katana_bank.ops import katana_imm_sequence
+
+    imm = as_imm(model)
+
+    def step(x, P, z, mu):
+        _, (x2, P2, mu2) = katana_imm_sequence(
+            imm, z[None], x, P, mu0=mu, symmetrize=symmetrize,
+            return_final=True)
+        return x2, P2, mu2
+
+    meta = dict(stage="imm_scan", layout="model-block", n=imm.n, m=imm.m,
+                N=N, K=imm.K)
+    return step, meta
+
+
 def build_stage(model: FilterModel, stage: str, N: Optional[int] = None,
                 dtype=jnp.float32, symmetrize: bool = False):
     """Uniform entry point; returns (step, meta)."""
@@ -549,6 +582,9 @@ def build_stage(model: FilterModel, stage: str, N: Optional[int] = None,
     if stage == "imm_bank":
         assert N is not None
         return build_imm_bank(model, N, dtype, symmetrize)
+    if stage == "imm_scan":
+        assert N is not None
+        return build_imm_scan(model, N, dtype, symmetrize)
     raise KeyError(f"unknown stage {stage!r}; known: {STAGES}")
 
 
@@ -606,6 +642,14 @@ def run_sequence(model: FilterModel, stage: str, zs, x0, P0,
         return imm_bank_sequence(as_imm(model), zs, jnp.asarray(x0, dtype),
                                  jnp.asarray(P0, dtype),
                                  symmetrize=symmetrize)
+    if stage == "imm_scan":
+        # Sequence-native multi-model stage: the whole stream (mixing
+        # and mode posterior included) through one kernel dispatch.
+        from repro.kernels.katana_bank.ops import katana_imm_sequence
+
+        return katana_imm_sequence(as_imm(model), zs, jnp.asarray(x0, dtype),
+                                   jnp.asarray(P0, dtype),
+                                   symmetrize=symmetrize)
     step, _ = build_stage(model, stage, N=N, dtype=dtype, symmetrize=symmetrize)
 
     x, P, _ = canonical_to_stage(stage, jnp.asarray(x0, dtype),

@@ -23,7 +23,7 @@ GEMM-only pipeline could not:
   * the CTRA Jacobian's sparsity (7 off-identity entries) makes
     F P F^T cost O(nnz·n) lane-ops instead of n^3.
 
-Three kernel shapes share the same emitted step math:
+Four kernel shapes share the same emitted step math:
 
   ``make_kernel``       one predict+update per pallas_call (the
         original per-frame dispatch, still used for single-frame
@@ -50,11 +50,23 @@ Three kernel shapes share the same emitted step math:
         computed for the Kalman gain (plus a closed-form determinant) —
         the IMM mode-probability update never inverts anything outside
         the kernel.
+  ``make_imm_scan_kernel``  the sequence-level IMM: mixing, the K
+        per-model predict+updates, the mode posterior AND the
+        moment-matched combination all inside one fori_loop over T —
+        a whole K-hypothesis IMM stream is ONE dispatch, with x/P/mu
+        VMEM-resident across frames. Each program's block flattens to
+        tile-local model-major lanes (the K hypotheses of a track at a
+        fixed stride), so mixing reaches across models with static
+        slices; shared F/Q/R entries and the (K, K) Markov transition
+        matrix fold to trace-time Python floats, model-varying entries
+        to loop-invariant lane vectors.
 
 Layout: struct-of-arrays, lanes-minor —
   x (n, N), P (n, n, N), z (m, N) / zs (T, m, N); grid tiles N by
-  ``lane_tile``. For the IMM kernel the lane axis is the flattened
-  (model, track) product, model-major.
+  ``lane_tile``. For the per-frame IMM kernel the lane axis is the
+  flattened (model, track) product, model-major across the whole bank;
+  the IMM scan kernel carries the model index as a leading block axis
+  and flattens it model-major WITHIN each program's tile.
 """
 from __future__ import annotations
 
@@ -93,10 +105,15 @@ def _is_zero(v) -> bool:
 
 
 def _bc(v, lane):
-    """Broadcast a constant-folded python float to a lane vector at a
-    store/stack boundary (all-zero F rows — e.g. the CV9/CT9 IMM models
-    forget their acceleration states — can fold a whole entry away)."""
-    return jnp.full_like(lane, v) if isinstance(v, (int, float)) else v
+    """Broadcast a constant-folded entry to a full lane vector at a
+    store/stack boundary: python floats (all-zero F rows — e.g. the
+    CV9/CT9 IMM models forget their acceleration states — can fold a
+    whole entry away) and any under-broadcast array a folded entry
+    left behind (shape-mismatched entries would break the fori_loop
+    carry structure)."""
+    if isinstance(v, (int, float)):
+        return jnp.full_like(lane, v)
+    return v if v.shape == lane.shape else jnp.broadcast_to(v, lane.shape)
 
 
 def _emit_dot(row_consts, vec, n):
@@ -366,27 +383,19 @@ def _check_selector(model: FilterModel) -> List[int]:
     return obs
 
 
-def make_step_fn(model: FilterModel, symmetrize: bool = True,
-                 with_loglik: bool = False):
-    """Emit one fused predict+update on lane vectors.
-
-    Returns ``step(xv, P, z) -> (x', P')`` where xv is a length-n list
-    of (lane,) vectors, P an n x n nested list of lane vectors, z a
-    length-m list (``with_loglik`` appends the per-lane measurement
-    log-likelihood). Shared by the per-frame kernel, the multi-frame
-    scan kernel and the K=1 IMM degenerate case, so all dispatch shapes
-    are numerically identical.
-    """
-    n, m = model.n, model.m
-    obs = _check_selector(model)
+def make_predict_fn(model: FilterModel, symmetrize: bool = True):
+    """Emit the time update alone: ``pred(xv, P) -> (x̂, P̂)`` on lane
+    vectors. Split out of ``make_step_fn`` so kernels that must keep the
+    predicted state live past the update (the fused IMM scan's coasting
+    frames select between x̂ and x') emit exactly the same op stream as
+    the fused predict+update path."""
+    n = model.n
     Qtab = _mat_from_np(np.asarray(model.Q, np.float64))
-    Rtab = _mat_from_np(np.asarray(model.R, np.float64))
     Fnp = np.asarray(model.F, np.float64)
     dt = float(model.dt)
     is_linear = model.is_linear
 
-    def step(xv, P, z):
-        # ---- predict ----
+    def pred(xv, P):
         if is_linear:
             F = _mat_from_np(Fnp)
             xp = _emit_matvec(F, xv, n)
@@ -405,6 +414,29 @@ def make_step_fn(model: FilterModel, symmetrize: bool = True,
             F[3][6] = dt
             F[4][5] = dt
         Pp = _emit_predict_cov(F, P, Qtab, n, symmetrize)
+        return xp, Pp
+
+    return pred
+
+
+def make_step_fn(model: FilterModel, symmetrize: bool = True,
+                 with_loglik: bool = False):
+    """Emit one fused predict+update on lane vectors.
+
+    Returns ``step(xv, P, z) -> (x', P')`` where xv is a length-n list
+    of (lane,) vectors, P an n x n nested list of lane vectors, z a
+    length-m list (``with_loglik`` appends the per-lane measurement
+    log-likelihood). Shared by the per-frame kernel, the multi-frame
+    scan kernel and the K=1 IMM degenerate case, so all dispatch shapes
+    are numerically identical.
+    """
+    n, m = model.n, model.m
+    obs = _check_selector(model)
+    Rtab = _mat_from_np(np.asarray(model.R, np.float64))
+    pred = make_predict_fn(model, symmetrize)
+
+    def step(xv, P, z):
+        xp, Pp = pred(xv, P)
         return _emit_update(xp, Pp, z, Rtab, obs, n, m, symmetrize,
                             with_loglik)
 
@@ -445,6 +477,90 @@ def make_imm_step_fn(models, symmetrize: bool = True):
         return _emit_update(xp, Pp, z, R, obs, n, m, symmetrize, True)
 
     return step
+
+
+_F32_TINY = float(np.finfo(np.float32).tiny)
+
+
+def _emit_imm_mix(xv, P, mu, Pi, n, K, tt, sym):
+    """IMM interaction (mixing) on model-major flattened lanes: every
+    state entry xv[d] / P[r][c] and mu is one (K·tt,) vector whose K
+    hypotheses of a track sit a fixed stride ``tt`` apart, so model i's
+    slab is the STATIC slice [i·tt, (i+1)·tt) — the K x K interaction
+    unrolls into slice / scaled-add ops on (tt,) vectors and one concat
+    per mixed entry, keeping the whole frame's op stream 1-D elementwise
+    (the shape class this backend executes best: higher-rank
+    broadcast/reduce and batched-einsum formulations of the same
+    contraction measured 3-6x slower per frame). ``Pi`` is the (K, K)
+    transition matrix as trace-time Python floats: zeros prune whole
+    terms and ones elide multiplies, §IV-C constant folding applied to
+    the Markov chain.
+
+    Returns (x_mix, P_mix, cbar_parts) mirroring ``rewrites.imm_mix``:
+    x_mix / P_mix are (K·tt,) vectors, cbar_parts the K per-mode (tt,)
+    predicted probabilities. The same tiny-clamped denominator keeps an
+    unreachable mode's 0/0 finite, and the spread term
+    (x_i - x_mix_j)(·)ᵀ keeps P_mix consistent. Under ``sym`` only the
+    upper triangle of P_mix is computed, mirrors aliased.
+    """
+    mu_i = [mu[i * tt:(i + 1) * tt] for i in range(K)]
+    x_i = [[xv[d][i * tt:(i + 1) * tt] for i in range(K)] for d in range(n)]
+    cbar_parts, w = [], []
+    for j in range(K):
+        cj = _emit_dot([Pi[i][j] for i in range(K)], mu_i, K)
+        cbar_parts.append(cj)
+        rden = 1.0 / jnp.maximum(cj, _F32_TINY)
+        w.append([0.0 if Pi[i][j] == 0.0 else
+                  (mu_i[i] if Pi[i][j] == 1.0 else Pi[i][j] * mu_i[i]) * rden
+                  for i in range(K)])
+    # Centered moment form of the spread: with x̃_i = x_i - x_0 (model
+    # 0's slab as the per-track reference — the spread is shift
+    # invariant, and centering keeps the squared terms at inter-model
+    # magnitude, so no cancellation),
+    #   Σ_i w_ij (x_i - m_j)(x_i - m_j)ᵀ
+    #     = Σ_i w_ij x̃_i x̃_iᵀ - m̃_j m̃_jᵀ,   m̃_j = Σ_i w_ij x̃_i.
+    # The per-model squares fold INTO the P contraction (A_i = P_i +
+    # x̃ x̃ᵀ, shared across all K targets j) instead of K per-(i, j)
+    # outer products — and every model-0 term x̃_0 = 0 prunes away.
+    xt = [[0.0 if i == 0 else x_i[d][i] - x_i[d][0] for i in range(K)]
+          for d in range(n)]
+    mt = [[_emit_dot(w[j], xt[d], K) for j in range(K)] for d in range(n)]
+    x_mix = [jnp.concatenate([_bc(mt[d][j] + x_i[d][0], mu_i[0])
+                              for j in range(K)]) for d in range(n)]
+    P_mix = [[None] * n for _ in range(n)]
+    for r in range(n):
+        for c in (range(r, n) if sym else range(n)):
+            A_i = [P[r][c][i * tt:(i + 1) * tt] if _is_zero(xt[r][i])
+                   or _is_zero(xt[c][i])
+                   else P[r][c][i * tt:(i + 1) * tt] + xt[r][i] * xt[c][i]
+                   for i in range(K)]
+            # _bc: a mode with an all-zero transition column folds its
+            # whole slab to the float 0.0 (w[j] is all-zero), which
+            # jnp.concatenate cannot take
+            parts = [_bc(_emit_dot(w[j], A_i, K) - mt[r][j] * mt[c][j],
+                         mu_i[0]) for j in range(K)]
+            P_mix[r][c] = jnp.concatenate(parts)
+            if sym:
+                P_mix[c][r] = P_mix[r][c]
+    return x_mix, P_mix, cbar_parts
+
+
+def _emit_mode_posterior(cbar_parts, ll, K, tt):
+    """mu'_k ∝ cbar_k exp(ll_k - max ll), per-mode slabs of the (K·tt,)
+    log-likelihood vector — the shift-stable mode-probability update
+    (``rewrites.imm_mode_posterior`` emitted in-kernel; the max
+    guarantees at least one finite weight). Returns the K (tt,)
+    posterior slabs."""
+    ll_k = [ll[k * tt:(k + 1) * tt] for k in range(K)]
+    mx = ll_k[0]
+    for k in range(1, K):
+        mx = jnp.maximum(mx, ll_k[k])
+    ws = [cbar_parts[k] * jnp.exp(ll_k[k] - mx) for k in range(K)]
+    s = ws[0]
+    for k in range(1, K):
+        s = s + ws[k]
+    r = 1.0 / s
+    return [wk * r for wk in ws]
 
 
 def make_kernel(model: FilterModel, symmetrize: bool = True):
@@ -522,6 +638,151 @@ def make_scan_kernel(model: FilterModel, T: int, symmetrize: bool = True):
             x_fin[i, :] = xT[i]
             for j in range(n):
                 P_fin[i, j, :] = PT[i][j]
+
+    return kernel
+
+
+def make_imm_scan_kernel(models, trans, T: int, symmetrize: bool = True,
+                         with_valid: bool = False):
+    """Build the fused IMM multi-frame kernel body: the ENTIRE
+    K-hypothesis IMM recursion over T frames inside one fori_loop, with
+    the model-conditioned x/P banks AND the mode probabilities mu
+    VMEM-resident across frames.
+
+    Layout: blocks arrive as x (K, n, tt), P (K, n, n, tt), mu (K, tt)
+    with tt tracks per program; in-kernel every state entry flattens to
+    ONE (K·tt,) lane vector, model-major — the K hypotheses of a track
+    live at the fixed stride tt in the padded bank, so model i's slab is
+    a static slice. That keeps the entire per-frame op stream 1-D
+    same-shape elementwise (the class the backend fuses like the
+    single-model kernels). The per-model F/Q/R constants fold through
+    ``plan_imm_tables``: entries shared by every model stay trace-time
+    Python floats (zeros pruned, exactly the single-model emit), entries
+    that differ materialize ONCE, outside the time loop, as
+    loop-invariant (K·tt,) vectors — so the K model-conditioned
+    predict+updates emit ONE op stream whose length is independent of K.
+    The (K, K) Markov transition matrix folds to float literals inside
+    ``_emit_imm_mix``.
+
+    Per frame t the body emits:
+      mix (mode-conditioned reblending of x/P from mu, slice/scaled-add
+      over the K slabs)
+      -> predict+update over all K models at once (+ the per-(model,
+         track) log-likelihood from the same cofactor S^{-1} as the
+         Kalman gain)
+      -> mode posterior -> moment-matched combined estimate (written to
+         xs_out[t]).
+
+    K=1 skips the mixing/posterior arithmetic and emits exactly
+    ``make_scan_kernel``'s op stream (the ``imm_scan`` stage reduces
+    bitwise to ``fused_scan``, nonlinear members included).
+
+    ``with_valid`` adds a (T, 1, tt) 0/1 measurement-validity input: an
+    invalid frame coasts — the carry keeps the predicted x̂/P̂ and the
+    Markov-predicted cbar (the tracker's no-measurement semantics), via
+    a mul/add select (no control flow, static shapes).
+    """
+    K = len(models)
+    n, m = models[0].n, models[0].m
+    obs = _check_selector(models[0])
+    if K == 1:
+        pred = make_predict_fn(models[0], symmetrize)
+        entries = V = None
+        Rtab0 = _mat_from_np(np.asarray(models[0].R, np.float64))
+    else:
+        for mdl in models:
+            if not mdl.is_linear:
+                raise NotImplementedError(
+                    "multi-model imm_scan requires linear member models "
+                    "(constant F tables); got " + mdl.name)
+            assert (mdl.n, mdl.m) == (n, m)
+            assert _check_selector(mdl) == obs
+        entries, V = plan_imm_tables(models)
+        pred = Rtab0 = None
+    Pi = [[float(v) for v in row] for row in np.asarray(trans, np.float64)]
+
+    def kernel(x_ref, P_ref, mu_ref, zs_ref, *rest):
+        if with_valid:
+            vs_ref, xs_out, x_fin, P_fin, mu_fin = rest
+        else:
+            xs_out, x_fin, P_fin, mu_fin = rest
+        tt = x_ref.shape[-1]
+        L = K * tt
+        mu0 = mu_ref[:, :].reshape(L)
+        proto = mu0  # (K·tt,) broadcast target for _bc
+        xv0 = [x_ref[:, i, :].reshape(L) for i in range(n)]
+        P0 = [[P_ref[:, i, j, :].reshape(L) for j in range(n)]
+              for i in range(n)]
+        if K > 1:
+            # materialize the model-varying constants once, OUTSIDE the
+            # time loop: V[e] (one float per model) -> a loop-invariant
+            # (K·tt,) vector whose slab k is the constant for model k
+            dt_ = proto.dtype
+            tabv = [jnp.concatenate([jnp.full((tt,), float(v), dt_)
+                                     for v in row]) for row in V]
+            Ftab, Qtab, Rtab = (_resolve_mat(entries[nm], tabv)
+                                for nm in ("F", "Q", "R"))
+        else:
+            Rtab = Rtab0
+
+        def body(t, carry):
+            xv, P, mu = carry
+            zt = zs_ref[pl.ds(t, 1)]  # (1, m, tt)
+            zr = [zt[0, r, :] for r in range(m)]
+            if K == 1:
+                xp, Pp = pred(xv, P)
+                xn, Pn = _emit_update(xp, Pp, zr, Rtab, obs, n, m,
+                                      symmetrize, False)
+            else:
+                # every model slab sees the same measurement
+                z = [jnp.concatenate([q] * K) for q in zr]
+                x_mix, P_mix, cbar_parts = _emit_imm_mix(
+                    xv, P, mu, Pi, n, K, tt, symmetrize)
+                xp = _emit_matvec(Ftab, x_mix, n)
+                Pp = _emit_predict_cov(Ftab, P_mix, Qtab, n, symmetrize)
+                xn, Pn, ll = _emit_update(xp, Pp, z, Rtab, obs, n, m,
+                                          symmetrize, True)
+                mu_parts = _emit_mode_posterior(cbar_parts, ll, K, tt)
+            if with_valid:
+                # coasting select: x̂/P̂ where v=0, x'/P' where v=1; mu
+                # falls back to the Markov-predicted cbar (still
+                # normalized; matches bank.update_imm_bank coasting)
+                v = vs_ref[pl.ds(t, 1)][0, 0, :]
+                vL = v if K == 1 else jnp.concatenate([v] * K)
+                nvL = 1.0 - vL
+                xn = [vL * a + nvL * b for a, b in zip(xn, xp)]
+                Pc = [[None] * n for _ in range(n)]
+                for i in range(n):
+                    for j in (range(i, n) if symmetrize else range(n)):
+                        Pc[i][j] = vL * Pn[i][j] + nvL * Pp[i][j]
+                        if symmetrize:
+                            Pc[j][i] = Pc[i][j]
+                Pn = Pc
+                if K > 1:
+                    nv = 1.0 - v
+                    mu_parts = [v * a + nv * b
+                                for a, b in zip(mu_parts, cbar_parts)]
+            # broadcast constant-folded entries: uniform carry structure
+            xn = [_bc(u, proto) for u in xn]
+            Pn = [[_bc(u, proto) for u in row] for row in Pn]
+            # moment-matched combined estimate, (tt,) per state dim
+            if K == 1:
+                mu_new = mu
+                xc = xn
+            else:
+                mu_new = jnp.concatenate(mu_parts)
+                xc = [_emit_dot(mu_parts,
+                                [u[k * tt:(k + 1) * tt] for k in range(K)],
+                                K) for u in xn]
+            xs_out[pl.ds(t, 1)] = jnp.stack(xc)[None]
+            return xn, Pn, mu_new
+
+        xT, PT, muT = jax.lax.fori_loop(0, T, body, (xv0, P0, mu0))
+        mu_fin[:, :] = muT.reshape(K, tt)
+        for i in range(n):
+            x_fin[:, i, :] = xT[i].reshape(K, tt)
+            for j in range(n):
+                P_fin[:, i, j, :] = PT[i][j].reshape(K, tt)
 
     return kernel
 
@@ -641,3 +902,66 @@ def katana_bank_scan_step(model: FilterModel, x, P, zs,
         ],
         interpret=interpret,
     )(x, P, zs)
+
+
+@functools.partial(jax.jit, static_argnames=("imm", "lane_tile",
+                                             "symmetrize", "interpret"))
+def katana_bank_imm_scan_step(imm, x, P, mu, zs, vs=None,
+                              lane_tile: int = LANE_TILE,
+                              symmetrize: bool = True,
+                              interpret: bool = True):
+    """Whole-sequence fused IMM scan, one pallas_call per sequence.
+
+    x: (K, n, N); P: (K, n, n, N); mu: (K, N); zs: (T, m, N) — the track
+    index N lanes-minor; ``lane_tile`` counts TRACKS per program, whose
+    block flattens in-kernel to K·lane_tile model-major lanes (the K
+    hypotheses of a track at stride lane_tile — see
+    ``make_imm_scan_kernel``). ``vs``, if given, is a (T, 1, N) 0/1
+    validity stream: invalid frames coast (predict only, mu <- cbar).
+    Returns (xs (T, n, N) moment-matched combined estimates, x_fin,
+    P_fin, mu_fin).
+
+    The grid tiles N only; mixing, the K predict+updates, the mode
+    posterior and the combination all run INSIDE the kernel's time loop,
+    so an entire IMM stream costs ONE dispatch — x, P and mu never
+    round-trip HBM between frames (vs one katana_bank_imm dispatch plus
+    XLA mixing per frame in ``ops.imm_bank_sequence``). The same
+    whole-T VMEM-block bound as ``katana_bank_scan_step`` applies (at
+    K· the block bytes); ``ops.katana_imm_sequence`` chunks longer
+    streams."""
+    K, n = imm.K, imm.n
+    m = imm.m
+    T = zs.shape[0]
+    N = x.shape[-1]
+    assert N % lane_tile == 0, (N, lane_tile)
+    grid = (N // lane_tile,)
+    kern = make_imm_scan_kernel(imm.models, imm.trans, T, symmetrize,
+                                with_valid=vs is not None)
+    in_specs = [
+        pl.BlockSpec((K, n, lane_tile), lambda i: (0, 0, i)),
+        pl.BlockSpec((K, n, n, lane_tile), lambda i: (0, 0, 0, i)),
+        pl.BlockSpec((K, lane_tile), lambda i: (0, i)),
+        pl.BlockSpec((T, m, lane_tile), lambda i: (0, 0, i)),
+    ]
+    args = [x, P, mu, zs]
+    if vs is not None:
+        in_specs.append(pl.BlockSpec((T, 1, lane_tile), lambda i: (0, 0, i)))
+        args.append(vs)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((T, n, lane_tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((K, n, lane_tile), lambda i: (0, 0, i)),
+            pl.BlockSpec((K, n, n, lane_tile), lambda i: (0, 0, 0, i)),
+            pl.BlockSpec((K, lane_tile), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, n, N), x.dtype),
+            jax.ShapeDtypeStruct((K, n, N), x.dtype),
+            jax.ShapeDtypeStruct((K, n, n, N), P.dtype),
+            jax.ShapeDtypeStruct((K, N), mu.dtype),
+        ],
+        interpret=interpret,
+    )(*args)

@@ -13,11 +13,19 @@ Dispatch granularities:
         stacked lanes of a single padded dispatch (model-major); each
         lane's F/Q/R constants come from a host-folded per-lane table
         indexed inside the kernel (see kernel.plan_imm_tables).
-  ``imm_bank_sequence``    a full IMM cycle per frame under one jitted
-        lax.scan: mix -> katana_bank_imm -> mode posterior. The mixing
-        runs between kernel dispatches (fusing it INTO the scan kernel
-        is a ROADMAP open item), so this is per-frame dispatch — the
-        layout work is still once per frame, not once per sequence.
+  ``katana_imm_sequence``  the fused IMM fast path: a whole (T, N, m)
+        stream through ONE pallas_call per time chunk — mixing, the K
+        per-model predict+updates, the mode posterior and the combined
+        estimate all run inside the kernel's time loop, so x/P AND mu
+        stay kernel-resident across frames and the AoS->SoA packing is
+        paid once per sequence (see kernel.make_imm_scan_kernel).
+        Supports a per-frame validity mask (coasting frames).
+  ``imm_bank_sequence``    the per-frame reference driver: a full IMM
+        cycle per frame under one jitted lax.scan — mix ->
+        katana_bank_imm -> mode posterior, with the mixing running
+        between kernel dispatches. Kept as the independently-built
+        equivalence oracle for ``katana_imm_sequence`` (both paths
+        require linear member models for K > 1).
 
 ``interpret=True`` everywhere in this container (CPU); on a real TPU
 pass interpret=False — the kernels and BlockSpecs are TPU-shaped.
@@ -34,6 +42,7 @@ from repro.core.filters import FilterModel, IMMModel
 from repro.core.rewrites import imm_combine, imm_mix, imm_mode_posterior
 from repro.kernels.katana_bank.kernel import (
     LANE_TILE,
+    katana_bank_imm_scan_step,
     katana_bank_imm_step,
     katana_bank_scan_step,
     katana_bank_step,
@@ -173,6 +182,92 @@ def katana_bank_imm(imm: IMMModel, x, P, z, lane_tile: int = LANE_TILE,
 
 @functools.partial(jax.jit,
                    static_argnames=("imm", "lane_tile", "symmetrize",
+                                    "interpret", "return_final",
+                                    "time_chunk"))
+def katana_imm_sequence(imm: IMMModel, zs, x0, P0, mu0=None, valid=None,
+                        lane_tile: int = 0, symmetrize: bool = True,
+                        interpret: bool = True, return_final: bool = False,
+                        time_chunk: int = 64):
+    """Fused IMM filtering of a (T, N, m) measurement stream: ONE kernel
+    dispatch per time chunk (the ``imm_scan`` stage fast path).
+
+    zs: (T, N, m). x0/P0 seed the bank: (N, n)/(N, n, n) seeds every
+    mode identically (fresh tracks), or (K, N, n)/(K, N, n, n) resumes a
+    mode-conditioned bank (e.g. a live ``IMMBankState``). mu0: (N, K)
+    initial mode probabilities (defaults to ``imm.mu0``). valid:
+    optional (T, N) boolean/0-1 mask — a False frame coasts that track
+    (time update only, mu <- the Markov-predicted cbar), the tracker's
+    no-measurement semantics. Returns xs (T, N, n) moment-matched
+    combined estimates; with ``return_final=True`` also
+    ``(x (K, N, n), P (K, N, n, n), mu (N, K))`` for chunked streaming.
+
+    ``lane_tile`` here counts TRACKS per program (each program holds all
+    K model slabs of its tracks, K·lane_tile lanes); the default 0
+    resolves to LANE_TILE // K so every program keeps the same lane
+    footprint as the single-model kernels regardless of K. The default
+    ``time_chunk`` is deliberately smaller than the single-model
+    sequence's: the IMM scan carries K· the block bytes per frame, and
+    bounded chunks also keep the backend's in-loop output-block updates
+    from degrading on long streams.
+
+    Unlike ``imm_bank_sequence`` (one katana_bank_imm dispatch plus XLA
+    mixing per frame), the mixing and mode-posterior algebra run INSIDE
+    the scan kernel between the update of frame t and the predict of
+    frame t+1: x, P and the mode probabilities are kernel-resident for
+    a whole chunk, and the lane padding + AoS->SoA transposes are paid
+    once per sequence. K=1 reduces exactly to ``katana_bank_sequence``.
+    """
+    zs = jnp.asarray(zs)
+    T, N, m = zs.shape
+    K, n = imm.K, imm.n
+    if not lane_tile:
+        # largest power of two <= LANE_TILE / K: keeps the BlockSpec
+        # minor dim lane-register-friendly even when K doesn't divide
+        # the lane tile (K=3 would otherwise give an 85-wide block)
+        lane_tile = 1 << max(3, (LANE_TILE // K).bit_length() - 1)
+    x0 = jnp.asarray(x0)
+    P0 = jnp.asarray(P0)
+    if x0.ndim == 2:
+        x0 = jnp.broadcast_to(x0[None], (K, N, n))
+    if P0.ndim == 3:
+        P0 = jnp.broadcast_to(P0[None], (K, N, n, n))
+    mu = (jnp.broadcast_to(jnp.asarray(imm.mu0, zs.dtype), (N, K))
+          if mu0 is None else jnp.asarray(mu0))
+    N_pad = -(-N // lane_tile) * lane_tile
+    xs_s = _pad_to(x0.transpose(0, 2, 1), N_pad)        # (K, n, N_pad)
+    Ps_s = _pad_to(P0.transpose(0, 2, 3, 1), N_pad)     # (K, n, n, N_pad)
+    # padding lanes get a uniform mode distribution so their (discarded)
+    # posterior algebra stays finite — all-zero mu would make the
+    # normalizing 1/sum(w) emit inf
+    mu_s = jnp.pad(mu.T, ((0, 0), (0, N_pad - N)),
+                   constant_values=1.0 / K)              # (K, N_pad)
+    if valid is not None:
+        # invalid frames never contribute (the kernel selects the
+        # prediction), but their z still flows through the emitted
+        # update before the select — zero it so a NaN-encoded "no
+        # detection" in a replay log cannot poison the carry via 0·NaN
+        zs = jnp.where(jnp.asarray(valid, bool)[:, :, None], zs, 0.0)
+    zs_s = _pad_to(zs.transpose(0, 2, 1), N_pad)        # (T, m, N_pad)
+    vs_s = (None if valid is None else
+            _pad_to(jnp.asarray(valid, zs.dtype)[:, None, :], N_pad))
+    chunks = []
+    for t0 in range(0, T, time_chunk):
+        vt = None if vs_s is None else vs_s[t0:t0 + time_chunk]
+        xs, xs_s, Ps_s, mu_s = katana_bank_imm_scan_step(
+            imm, xs_s, Ps_s, mu_s, zs_s[t0:t0 + time_chunk], vt,
+            lane_tile=lane_tile, symmetrize=symmetrize, interpret=interpret)
+        chunks.append(xs)
+    xs = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
+    out = xs[:, :, :N].transpose(0, 2, 1)               # (T, N, n)
+    if return_final:
+        return out, (xs_s[:, :, :N].transpose(0, 2, 1),
+                     Ps_s[:, :, :, :N].transpose(0, 3, 1, 2),
+                     mu_s[:, :N].T)
+    return out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("imm", "lane_tile", "symmetrize",
                                     "interpret", "return_final"))
 def imm_bank_sequence(imm: IMMModel, zs, x0, P0, mu0=None,
                       lane_tile: int = LANE_TILE, symmetrize: bool = True,
@@ -189,8 +284,9 @@ def imm_bank_sequence(imm: IMMModel, zs, x0, P0, mu0=None,
     Per frame: IMM mixing (einsum algebra from ``repro.core.rewrites``)
     -> ``katana_bank_imm`` (predict+update+loglik, stacked lanes) ->
     mode posterior from the kernel's log-likelihoods. Mixing between
-    dispatches is the one remaining HBM round-trip; fusing it into the
-    scan kernel is a ROADMAP open item.
+    dispatches means x/P round-trip HBM (and the packing is re-paid)
+    every frame — ``katana_imm_sequence`` is the fused fast path; this
+    driver remains as its independently-built equivalence oracle.
     """
     zs = jnp.asarray(zs)
     T, N, m = zs.shape

@@ -25,8 +25,8 @@ import numpy as np
 from repro.core.bank import BankState, init_bank, init_imm_bank
 from repro.core.filters import FilterModel, IMMModel
 from repro.core.tracker import TrackerConfig, frame_step, imm_frame_step
-from repro.kernels.katana_bank.ops import (imm_bank_sequence,
-                                           katana_bank_sequence)
+from repro.kernels.katana_bank.ops import (katana_bank_sequence,
+                                           katana_imm_sequence)
 
 
 @dataclass
@@ -133,7 +133,9 @@ class TrackingEngine:
         frames. Returns the (T, N, n) filtered states. Does not touch
         the live bank, and is accounted under the replay_* stats so the
         real-time serving fps stays meaningful. IMM engines replay
-        through ``imm_bank_sequence`` (combined estimates out).
+        through ``katana_imm_sequence`` — the fused IMM scan (mixing and
+        mode posterior inside the kernel's time loop, one dispatch per
+        chunk), combined estimates out.
         """
         zs = np.asarray(zs, np.float32)
         T, N, m = zs.shape
@@ -141,7 +143,7 @@ class TrackingEngine:
             x0 = np.tile(self.model.x0, (N, 1)).astype(np.float32)
         if P0 is None:
             P0 = np.tile(self.model.P0, (N, 1, 1)).astype(np.float32)
-        seq = imm_bank_sequence if self.is_imm else katana_bank_sequence
+        seq = katana_imm_sequence if self.is_imm else katana_bank_sequence
         t0 = time.perf_counter()
         out = seq(self.model, jnp.asarray(zs),
                   jnp.asarray(x0, jnp.float32),

@@ -1,0 +1,214 @@
+"""Fused IMM scan (`imm_scan` stage): the whole mix -> predict/update
+-> mode-posterior cycle inside one Pallas dispatch must be numerically
+indistinguishable from the per-frame driver and the float64 oracle,
+reduce bitwise to the single-model fused scan at K=1, and implement the
+tracker's coasting semantics on no-measurement frames."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ref as oref
+from repro.core.bank import init_imm_bank, replay_imm_bank
+from repro.core.filters import as_imm, get_filter, make_imm
+from repro.core.rewrites import run_sequence
+from repro.data.trajectories import maneuvering_batch
+from repro.kernels.katana_bank.ops import (imm_bank_sequence,
+                                           katana_bank_sequence,
+                                           katana_imm_sequence)
+
+
+def _seq_inputs(model, N, dtype=jnp.float32):
+    x0 = jnp.asarray(np.tile(model.x0, (N, 1)), dtype)
+    P0 = jnp.asarray(np.tile(model.P0, (N, 1, 1)), dtype)
+    return x0, P0
+
+
+def test_imm_scan_matches_per_frame_driver_and_oracle():
+    """One-dispatch fused IMM == the lax.scan per-frame driver (the
+    independently built mix -> katana_bank_imm -> posterior pipeline)
+    AND the textbook float64 recursion, states and final mode probs."""
+    imm = make_imm()
+    T, N = 40, 5
+    rng = np.random.default_rng(3)
+    zs = rng.normal(size=(T, N, imm.m)) * 0.5
+    zsf = jnp.asarray(zs, jnp.float32)
+    x0, P0 = _seq_inputs(imm, N)
+    got, (xf, Pf, muf) = katana_imm_sequence(imm, zsf, x0, P0,
+                                             return_final=True)
+    drv = imm_bank_sequence(imm, zsf, x0, P0, lane_tile=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(drv),
+                               atol=2e-5, rtol=2e-4)
+    want, mus = oref.run_imm_batched(imm, zs, np.asarray(x0), np.asarray(P0))
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(muf), mus[-1], atol=1e-5)
+    assert xf.shape == (imm.K, N, imm.n)
+    assert Pf.shape == (imm.K, N, imm.n, imm.n)
+
+
+def test_imm_scan_on_maneuvering_scene_tracks_driver():
+    """Same equivalence on the CV/CT/CA switching scene (mode
+    probabilities actually move here, so the in-kernel posterior and
+    mixing are exercised away from the uniform fixed point)."""
+    imm = make_imm()
+    T, N = 48, 4
+    truth, zs = maneuvering_batch(T, N, seed=7)
+    zsf = jnp.asarray(zs, jnp.float32)
+    x0, P0 = _seq_inputs(imm, N)
+    got = np.asarray(katana_imm_sequence(imm, zsf, x0, P0))
+    drv = np.asarray(imm_bank_sequence(imm, zsf, x0, P0, lane_tile=128))
+    np.testing.assert_allclose(got, drv, atol=5e-5, rtol=5e-4)
+
+
+@pytest.mark.parametrize("kind", ["cv9", "ekf"])
+def test_imm_scan_k1_reduces_to_fused_scan(kind):
+    """K=1 emits exactly make_scan_kernel's op stream — bitwise equal to
+    katana_bank_sequence, including the nonlinear CTRA member."""
+    model = get_filter(kind)
+    T, N = 30, 6
+    rng = np.random.default_rng(11)
+    zs = jnp.asarray(rng.normal(size=(T, N, model.m)) * 0.5, jnp.float32)
+    x0, P0 = _seq_inputs(model, N)
+    got = np.asarray(katana_imm_sequence(as_imm(model), zs, x0, P0,
+                                         lane_tile=128))
+    plain = np.asarray(katana_bank_sequence(model, zs, x0, P0,
+                                            lane_tile=128))
+    np.testing.assert_array_equal(got, plain)
+
+
+def test_imm_scan_coasting_frames_match_oracle():
+    """valid=False frames coast: time update only, mu <- the
+    Markov-predicted cbar — the float64 oracle extended with the same
+    semantics must agree, including tracks coasting while others
+    update in the same frame."""
+    imm = make_imm()
+    T, N = 36, 4
+    rng = np.random.default_rng(5)
+    zs = rng.normal(size=(T, N, imm.m)) * 0.5
+    valid = np.ones((T, N), bool)
+    valid[6] = False          # whole frame dropped
+    valid[20, ::2] = False    # half the tracks coast
+    valid[28:31, 1] = False   # one track coasts three frames straight
+    zsf = jnp.asarray(zs, jnp.float32)
+    x0, P0 = _seq_inputs(imm, N)
+    got = np.asarray(katana_imm_sequence(imm, zsf, x0, P0,
+                                         valid=jnp.asarray(valid)))
+    want, _ = oref.run_imm_batched(imm, zs, np.asarray(x0), np.asarray(P0),
+                                   valid=valid)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+    assert np.isfinite(got).all()
+
+
+def test_imm_scan_coasting_tolerates_nan_measurements():
+    """A replay log that encodes 'no detection' as NaN must not poison
+    the carry: invalid frames' z is masked before the kernel, so the
+    result equals the same stream with zeros in the invalid slots."""
+    imm = make_imm()
+    T, N = 20, 3
+    rng = np.random.default_rng(2)
+    zs = rng.normal(size=(T, N, imm.m)) * 0.5
+    valid = np.ones((T, N), bool)
+    valid[5] = False
+    valid[12, 0] = False
+    zs_nan = zs.copy()
+    zs_nan[~valid] = np.nan
+    x0, P0 = _seq_inputs(imm, N)
+    got = np.asarray(katana_imm_sequence(imm, jnp.asarray(zs_nan, jnp.float32),
+                                         x0, P0, valid=jnp.asarray(valid)))
+    assert np.isfinite(got).all()
+    ref_run = np.asarray(katana_imm_sequence(imm, jnp.asarray(zs, jnp.float32),
+                                             x0, P0,
+                                             valid=jnp.asarray(valid)))
+    np.testing.assert_array_equal(got, ref_run)
+
+
+def test_imm_scan_unreachable_mode_column():
+    """A transition matrix with an all-zero column (a mode that can be
+    left but never entered) folds that mode's whole mixing slab to the
+    constant 0 — the kernel must still trace and stay finite, with the
+    dead mode's posterior weight exactly 0 (same contract as
+    rewrites.imm_mix)."""
+    from repro.core.filters import IMMModel, make_ca9_lkf, make_cv9_lkf
+
+    cv, ca = make_cv9_lkf(), make_ca9_lkf()
+    trans = np.array([[1.0, 0.0], [1.0, 0.0]])  # mode 1 unreachable
+    imm = IMMModel(name="dead-col", models=(cv, ca), trans=trans,
+                   mu0=np.array([1.0, 0.0]))
+    T, N = 12, 2
+    rng = np.random.default_rng(4)
+    zs = rng.normal(size=(T, N, imm.m)) * 0.5
+    x0, P0 = _seq_inputs(imm, N)
+    got, (_, _, muf) = katana_imm_sequence(imm, jnp.asarray(zs, jnp.float32),
+                                           x0, P0, return_final=True)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_array_equal(np.asarray(muf)[:, 1], 0.0)
+    drv = imm_bank_sequence(imm, jnp.asarray(zs, jnp.float32), x0, P0,
+                            lane_tile=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(drv),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_imm_scan_chunked_streaming_is_exact():
+    """time_chunk splits a stream into several dispatches with
+    (x, P, mu) carried between them — bitwise identical to one
+    dispatch, so VMEM-bounded chunking is free."""
+    imm = make_imm()
+    T, N = 30, 3
+    rng = np.random.default_rng(9)
+    zs = jnp.asarray(rng.normal(size=(T, N, imm.m)) * 0.5, jnp.float32)
+    x0, P0 = _seq_inputs(imm, N)
+    one = np.asarray(katana_imm_sequence(imm, zs, x0, P0, time_chunk=64))
+    many = np.asarray(katana_imm_sequence(imm, zs, x0, P0, time_chunk=7))
+    np.testing.assert_array_equal(one, many)
+
+
+def test_imm_scan_stage_in_run_sequence():
+    """The 'imm_scan' rewrites stage drives through the uniform
+    run_sequence entry point and tracks the float64 oracle."""
+    imm = make_imm()
+    T, N = 30, 4
+    rng = np.random.default_rng(13)
+    zs = rng.normal(size=(T, N, imm.m)) * 0.5
+    x0 = np.tile(imm.x0, (N, 1))
+    P0 = np.tile(imm.P0, (N, 1, 1))
+    got = np.asarray(run_sequence(imm, "imm_scan", zs, x0, P0))
+    want, _ = oref.run_imm_batched(imm, zs, x0, P0)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_replay_imm_bank_resumes_mode_conditioned_state():
+    """bank.replay_imm_bank seeds the fused scan from a live
+    IMMBankState (mode-conditioned x/P + mu) — equivalent to running
+    the whole stream through one katana_imm_sequence call."""
+    imm = make_imm()
+    C, T = 3, 24
+    rng = np.random.default_rng(17)
+    zs = jnp.asarray(rng.normal(size=(T, C, imm.m)) * 0.5, jnp.float32)
+    x0, P0 = _seq_inputs(imm, C)
+    # run half the stream, reseed a bank from the finals, run the rest
+    first, (xh, Ph, muh) = katana_imm_sequence(imm, zs[:T // 2], x0, P0,
+                                               return_final=True)
+    bank = init_imm_bank(imm, C)._replace(x=xh, P=Ph, mu=muh)
+    rest = replay_imm_bank(imm, bank, zs[T // 2:])
+    whole = katana_imm_sequence(imm, zs, x0, P0)
+    np.testing.assert_allclose(np.asarray(rest),
+                               np.asarray(whole)[T // 2:],
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_imm_engine_replay_uses_fused_scan():
+    """TrackingEngine.replay for an IMM model routes through
+    katana_imm_sequence and agrees with the per-frame driver."""
+    from repro.core.tracker import TrackerConfig
+    from repro.serving.engine import TrackingEngine
+
+    imm = make_imm()
+    eng = TrackingEngine(imm, TrackerConfig(capacity=8, max_meas=4))
+    T, N = 20, 2
+    rng = np.random.default_rng(21)
+    zs = (rng.normal(size=(T, N, imm.m)) * 0.5).astype(np.float32)
+    out = eng.replay(zs)
+    assert out.shape == (T, N, imm.n)
+    x0, P0 = _seq_inputs(imm, N)
+    drv = imm_bank_sequence(imm, jnp.asarray(zs), x0, P0, lane_tile=128)
+    np.testing.assert_allclose(out, np.asarray(drv), atol=2e-5, rtol=2e-4)
+    assert eng.stats.replay_frames == T
