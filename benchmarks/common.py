@@ -39,4 +39,7 @@ def hlo_op_counts(fn: Callable, *args, ops=("transpose", "reshape",
 
 
 def hlo_flops(fn: Callable, *args) -> float:
-    return float(compiled_of(fn, *args).cost_analysis().get("flops", 0.0))
+    ca = compiled_of(fn, *args).cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax<=0.4 returns [dict] per device
+        ca = ca[0] if ca else {}
+    return float(ca.get("flops", 0.0))

@@ -24,6 +24,9 @@ ALL = ("accuracy", "fig4", "batching", "table1", "roofline", "scan_fusion",
 SMOKE_KWARGS = {
     "scan_fusion": dict(Ns=(8,), T=8),
     "imm": dict(N=4, T=8),
+    # keeps the HLO-census rows small AND drives the sharded-IMM serving
+    # rows at a 4-sensor fleet over however many host devices exist
+    "batching": dict(N=8, imm_sensors=4, imm_frames=4),
 }
 
 

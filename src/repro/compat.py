@@ -1,11 +1,11 @@
 """Thin jax version-compat layer.
 
 The repo targets current jax but must degrade gracefully on the older
-runtime baked into CI/containers (0.4.x): ``jax.shard_map`` and
-``jax.sharding.AxisType`` only exist on newer releases, and the old
-spelling lives under ``jax.experimental.shard_map`` with ``check_rep``
-instead of ``check_vma``. Keep every such switch here so call sites
-stay clean.
+runtime baked into CI/containers (0.4.x): ``jax.shard_map``,
+``jax.make_mesh`` and ``jax.sharding.AxisType`` only exist on newer
+releases, and the old shard_map spelling lives under
+``jax.experimental.shard_map`` with ``check_rep`` instead of
+``check_vma``. Keep every such switch here so call sites stay clean.
 """
 from __future__ import annotations
 
@@ -30,3 +30,22 @@ def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
 
     return _shard_map(f, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, check_rep=check)
+
+
+def make_mesh(shape, axes, **kwargs):
+    """Version-portable ``jax.make_mesh`` (added in 0.4.35): older
+    releases fall back to ``mesh_utils.create_device_mesh`` + ``Mesh``.
+    Extra kwargs (``axis_types``) are dropped on the fallback — the old
+    Mesh has no axis-type concept. Like ``jax.make_mesh``, a mesh
+    smaller than the host uses the first prod(shape) devices
+    (``create_device_mesh`` alone would demand an exact count)."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
+    import math
+
+    from jax.experimental import mesh_utils
+    from jax.sharding import Mesh
+
+    devs = jax.devices()[:math.prod(shape)]
+    return Mesh(mesh_utils.create_device_mesh(tuple(shape), devs),
+                tuple(axes))

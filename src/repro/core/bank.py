@@ -200,6 +200,38 @@ def spawn_tracks(model: FilterModel, bank: BankState, z: jnp.ndarray,
     )
 
 
+def bank_sensor_axes(bank):
+    """Per-leaf sensor-axis positions for stacking this bank over S
+    independent sensors — the vmap in/out_axes pytree and the axis the
+    serving mesh shards.
+
+    Model-conditioned leaves of an ``IMMBankState`` (x, P) keep the
+    model axis K outermost, so the sensor axis slots in at position 1
+    and the stacked layout is ``(K, S, C, ...)`` — one contiguous
+    (sensor, slot) block per model slab, which is what lets the sharded
+    replay flatten a shard's sensors straight onto the kernel's track
+    axis. Every other leaf (mu, lifecycle, ids) leads with S.
+    """
+    if isinstance(bank, IMMBankState):
+        return IMMBankState(x=1, P=1, mu=0, active=0, hits=0, misses=0,
+                            age=0, track_id=0, next_id=0)
+    return BankState(x=0, P=0, active=0, hits=0, misses=0, age=0,
+                     track_id=0, next_id=0)
+
+
+def stack_sensor_banks(bank, n_sensors: int):
+    """Broadcast one bank into an S-sensor stack along
+    ``bank_sensor_axes`` (every sensor starts from the same empty
+    bank). Works on BankState and IMMBankState alike."""
+
+    def put(x, a):
+        x = jnp.expand_dims(x, a)
+        shape = x.shape[:a] + (n_sensors,) + x.shape[a + 1:]
+        return jnp.broadcast_to(x, shape).copy()
+
+    return jax.tree.map(put, bank, bank_sensor_axes(bank))
+
+
 def prune_bank(bank, max_misses: int = 5):
     """Retire tracks that coasted too long; their slots become free.
     Works on BankState and IMMBankState alike (shared lifecycle

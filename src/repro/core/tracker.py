@@ -164,6 +164,34 @@ def imm_frame_step(imm: IMMModel, cfg: TrackerConfig, bank: IMMBankState,
                        mode_probs=bank_f.mu, x_est=x_est)
 
 
+def make_multi_sensor_step(model, cfg: TrackerConfig):
+    """Build the S-sensor frame step: ``frame_step`` (FilterModel) or
+    ``imm_frame_step`` (IMMModel) vmapped over a sensor axis.
+
+    Returns ``(bank, axes, step)`` where ``bank`` is one empty
+    single-sensor bank, ``axes`` the sensor-axis pytree
+    (``bank.bank_sensor_axes`` — sensor axis 1 for the model-
+    conditioned IMM leaves, 0 elsewhere) and
+    ``step(banks, z, valid)`` maps ``z (S, max_meas, m)`` /
+    ``valid (S, max_meas)`` over S independent sensors in one XLA
+    program. Association, spawn/prune lifecycle and (for IMM) the
+    shared-across-hypotheses track ids all stay strictly per-sensor —
+    vmap carries no cross-sensor coupling, which is what makes the
+    step shard_map-able with zero collectives
+    (``repro.serving.engine.ShardedBankEngine``)."""
+    is_imm = isinstance(model, IMMModel)
+    one = (bank_lib.init_imm_bank if is_imm else bank_lib.init_bank)(
+        model, cfg.capacity, jnp.dtype(cfg.dtype))
+    axes = bank_lib.bank_sensor_axes(one)
+    base = imm_frame_step if is_imm else frame_step
+    out_axes = FrameResult(bank=axes, assoc=0, unassigned=0, confirmed=0,
+                           mode_probs=0, x_est=0)
+    step = jax.vmap(
+        lambda bank, z, valid: base(model, cfg, bank, z, valid),
+        in_axes=(axes, 0, 0), out_axes=out_axes)
+    return one, axes, step
+
+
 def make_jitted_tracker(model: FilterModel, cfg: TrackerConfig):
     """Returns (init_bank, step) with step jitted over (bank, z, valid)."""
 

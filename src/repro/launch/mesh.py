@@ -5,7 +5,7 @@ state (the dry-run must set XLA_FLAGS before any jax initialization).
 """
 from __future__ import annotations
 
-import jax
+from repro import compat
 
 try:  # jax >= 0.5 explicit axis types; older releases have neither
     from jax.sharding import AxisType
@@ -24,10 +24,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (2, 16, 16) ('pod','data','model') = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
+    return compat.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/elastic restore."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         **_axis_type_kwargs(len(axes)))
+    return compat.make_mesh(tuple(shape), tuple(axes),
+                            **_axis_type_kwargs(len(axes)))

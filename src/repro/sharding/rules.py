@@ -128,6 +128,28 @@ def logical_to_spec(axes: Sequence[Optional[str]], shape: Tuple[int, ...],
     return P(*out)
 
 
+def sensor_specs(axes_tree, tree, ctx: ShardingContext):
+    """PartitionSpec tree for a sensor-stacked tracking bank (or any
+    pytree with one 'batch over independent sensors' axis per leaf).
+
+    ``axes_tree`` gives the per-leaf sensor-axis position (see
+    ``repro.core.bank.bank_sensor_axes`` — 1 for the model-conditioned
+    (K, S, C, ...) leaves of an IMM bank, 0 elsewhere); that axis maps
+    to the mesh data axes and everything else is replicated. This is
+    the serving analogue of ``logical_to_spec``'s 'embed -> FSDP'
+    rule: sensors are the data-parallel unit of the tracking fleet.
+    """
+    if ctx.mesh is None:
+        return jax.tree.map(lambda a, x: P(), axes_tree, tree)
+
+    def one(a, x):
+        parts: list = [None] * x.ndim
+        parts[a] = ctx.data_axes
+        return P(*parts)
+
+    return jax.tree.map(one, axes_tree, tree)
+
+
 def tree_specs(param_axes, params_shape, ctx: ShardingContext):
     """Map a tree of logical-axes tuples + matching ShapeDtypeStruct tree
     to a tree of PartitionSpecs."""

@@ -98,6 +98,94 @@ def test_random_linear_system_stage_equivalence(m, seed):
     np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-2)
 
 
+# ---------------------------------------------------------------------------
+# Property-based IMM algebra invariants (rewrites.imm_*). These are the
+# contracts every fused path (imm_bank / imm_scan kernels, the sharded
+# serving engine) inherits — run via tests/_hypothesis_compat, so they
+# degrade to fixed-seed parametrized cases when hypothesis is absent.
+# ---------------------------------------------------------------------------
+
+def _imm_random(K, B, n, rng, dirichlet=True):
+    """Random mode-conditioned states: x (K, B, n), PSD P (K, B, n, n),
+    normalized mu (B, K), row-stochastic Pi (K, K)."""
+    x = rng.normal(size=(K, B, n)).astype(np.float32)
+    A = rng.normal(size=(K, B, n, n)) * 0.4
+    P = (A @ A.transpose(0, 1, 3, 2) + np.eye(n)).astype(np.float32)
+    mu = (rng.random((B, K)) + 1e-3).astype(np.float32)
+    mu /= mu.sum(1, keepdims=True)
+    Pi = (rng.random((K, K)) + 1e-3).astype(np.float32)
+    Pi /= Pi.sum(1, keepdims=True)
+    return x, P, mu, Pi
+
+
+@given(st.integers(1, 5), st.integers(1, 6), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_prop_imm_mode_posterior_normalized_nonnegative(K, B, seed):
+    """mu' = posterior(cbar, loglik) is a distribution for ANY finite
+    log-likelihoods (the shift-stable exp never over/underflows all
+    modes at once): rows sum to 1, entries in [0, 1], no NaN."""
+    from repro.core.rewrites import imm_mode_posterior
+
+    rng = np.random.default_rng(seed)
+    _, _, cbar, _ = _imm_random(K, B, 2, rng)
+    # wild dynamic range, incl. the hugely-negative logliks a gated-out
+    # mode produces
+    loglik = (rng.uniform(-1e4, 1e2, size=(K, B))).astype(np.float32)
+    mu = np.asarray(imm_mode_posterior(jnp.asarray(cbar),
+                                       jnp.asarray(loglik)))
+    assert np.isfinite(mu).all()
+    assert (mu >= 0).all() and (mu <= 1 + 1e-6).all()
+    np.testing.assert_allclose(mu.sum(1), 1.0, atol=1e-5)
+
+
+@given(st.integers(1, 4), st.integers(1, 5), st.integers(2, 6),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_prop_imm_combine_covariance_symmetric_psd(K, B, n, seed):
+    """The moment-matched mixture covariance is symmetric PSD whenever
+    the per-mode covariances are (the spread term can only ADD
+    dispersion), and the mean is inside the convex hull of the
+    per-mode means."""
+    from repro.core.rewrites import imm_combine
+
+    rng = np.random.default_rng(seed)
+    x, P, mu, _ = _imm_random(K, B, n, rng)
+    x_c, P_c = imm_combine(jnp.asarray(x), jnp.asarray(P), jnp.asarray(mu))
+    x_c, P_c = np.asarray(x_c), np.asarray(P_c)
+    assert np.isfinite(P_c).all()
+    for b in range(B):
+        np.testing.assert_allclose(P_c[b], P_c[b].T, atol=1e-4)
+        assert np.linalg.eigvalsh(P_c[b].astype(np.float64)).min() > -1e-3
+        assert (x_c[b] <= x[:, b].max(0) + 1e-5).all()
+        assert (x_c[b] >= x[:, b].min(0) - 1e-5).all()
+
+
+@given(st.integers(2, 4), st.integers(1, 5), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_prop_imm_mix_permutation_equivariant(K, B, seed):
+    """Relabeling the K models (permuting x/P slabs, mu columns, and
+    both axes of the transition matrix) permutes imm_mix's outputs the
+    same way — the mixing algebra carries no hidden model-order
+    dependence. Exercised with n=4 states."""
+    from repro.core.rewrites import imm_mix
+
+    n = 4
+    rng = np.random.default_rng(seed)
+    x, P, mu, Pi = _imm_random(K, B, n, rng)
+    perm = rng.permutation(K)
+    xm, Pm, cbar = imm_mix(jnp.asarray(x), jnp.asarray(P), jnp.asarray(mu),
+                           jnp.asarray(Pi))
+    xm2, Pm2, cbar2 = imm_mix(jnp.asarray(x[perm]), jnp.asarray(P[perm]),
+                              jnp.asarray(mu[:, perm]),
+                              jnp.asarray(Pi[np.ix_(perm, perm)]))
+    np.testing.assert_allclose(np.asarray(xm2), np.asarray(xm)[perm],
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(Pm2), np.asarray(Pm)[perm],
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(cbar2), np.asarray(cbar)[:, perm],
+                               atol=1e-6)
+
+
 @pytest.mark.parametrize("kind", ["lkf", "ekf"])
 def test_covariance_stays_psd(kind):
     model = get_filter(kind)

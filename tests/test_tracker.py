@@ -83,6 +83,60 @@ def test_greedy_assign_is_matching(C, M, seed):
     assert len(used) == len(set(used.tolist()))
 
 
+@given(st.integers(1, 7), st.integers(1, 7), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_prop_greedy_assign_injective_and_gated(C, M, seed):
+    """Property sweep of the two safety contracts at once: the
+    assignment is an injective partial map slots -> measurements, and
+    every committed pair is BOTH marked valid and within the gate —
+    greedy never pairs through an invalid entry or past the chi-square
+    radius, whatever the cost landscape."""
+    rng = np.random.default_rng(seed)
+    gate = float(rng.uniform(1.0, 9.0))
+    cost = rng.uniform(0, 10, (C, M)).astype(np.float32)
+    valid = rng.random((C, M)) > 0.4
+    assoc = np.asarray(greedy_assign(jnp.asarray(cost), jnp.asarray(valid),
+                                     jnp.asarray(gate), min(C, M)))
+    assert assoc.shape == (C,)
+    used = assoc[assoc >= 0]
+    assert len(used) == len(set(used.tolist()))  # injective
+    for c in range(C):
+        if assoc[c] >= 0:
+            assert valid[c, assoc[c]]
+            assert cost[c, assoc[c]] <= gate
+
+
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(0, 4),
+       st.integers(0, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_prop_greedy_assign_invariant_to_invalid_padding(C, M, pad_c, pad_m,
+                                                         seed):
+    """Padding the cost matrix with invalid rows (dead slots) and
+    columns (padding measurements) changes NOTHING: the original slots
+    get the identical assignment and the padding slots stay -1. This is
+    the static-shape serving contract — a fleet-sized (capacity,
+    max_meas) frame with most entries masked must associate exactly
+    like the tight matrix."""
+    rng = np.random.default_rng(seed)
+    gate = 8.0
+    cost = rng.uniform(0, 10, (C, M)).astype(np.float32)
+    valid = rng.random((C, M)) > 0.3
+    base = np.asarray(greedy_assign(jnp.asarray(cost), jnp.asarray(valid),
+                                    jnp.asarray(gate), min(C, M)))
+    # pad with garbage costs but valid=False — the mask must win
+    cost_p = np.zeros((C + pad_c, M + pad_m), np.float32)
+    cost_p[:C, :M] = cost
+    cost_p[C:, :] = rng.uniform(0, 1, (pad_c, M + pad_m))  # temptingly cheap
+    cost_p[:, M:] = rng.uniform(0, 1, (C + pad_c, pad_m))
+    valid_p = np.zeros((C + pad_c, M + pad_m), bool)
+    valid_p[:C, :M] = valid
+    got = np.asarray(greedy_assign(jnp.asarray(cost_p), jnp.asarray(valid_p),
+                                   jnp.asarray(gate),
+                                   min(C + pad_c, M + pad_m)))
+    np.testing.assert_array_equal(got[:C], base)
+    assert (got[C:] == -1).all()
+
+
 def test_spawn_fills_free_slots_deterministically():
     model = get_filter("lkf")
     bank = bank_lib.init_bank(model, capacity=4)
