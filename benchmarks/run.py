@@ -19,7 +19,7 @@ import traceback
 from typing import List
 
 ALL = ("accuracy", "fig4", "batching", "table1", "roofline", "scan_fusion",
-       "imm")
+       "imm", "frame")
 
 SMOKE_KWARGS = {
     "scan_fusion": dict(Ns=(8,), T=8),
@@ -27,6 +27,11 @@ SMOKE_KWARGS = {
     # keeps the HLO-census rows small AND drives the sharded-IMM serving
     # rows at a 4-sensor fleet over however many host devices exist
     "batching": dict(N=8, imm_sensors=4, imm_frames=4),
+    # tiny shapes: the fused-vs-einsum frame equivalence assert is the
+    # point in CI; the timings at these shapes are not perf data.
+    # sensors=8 so the 8-device sharded row actually runs under the
+    # bench-smoke job's forced 8-device host platform
+    "frame": dict(Cs=(16,), M=8, sensors=8, sensor_frames=4),
 }
 
 

@@ -28,7 +28,8 @@ import numpy as np
 from repro.core.filters import FilterModel, IMMModel
 from repro.core.rewrites import (build_batched_lanes, gaussian_loglik,
                                  imm_mix, imm_mode_posterior, small_det,
-                                 small_inv, stage_constants)
+                                 small_inv, stage_constants, sym_unpack,
+                                 triu_pack)
 
 
 class BankState(NamedTuple):
@@ -61,17 +62,27 @@ def _predict_lanes(model: FilterModel, x: jnp.ndarray, P: jnp.ndarray,
     """Batched-lanes time update + innovation quantities for (C, n)
     states: returns (x_pred, P_pred, z_pred, S, Sinv, PHt). This is the
     single place S is built and inverted per (model, frame) — shared by
-    the plain and the IMM bank."""
+    the plain and the IMM bank.
+
+    The covariance propagation emits only the upper triangle of
+    F·P·Fᵀ + Q and aliases the mirrors (``rewrites.triu_pack``) — the
+    kernels' symmetrize=True discipline on the einsum path: exact
+    symmetry by construction (no square-then-average pass) at
+    n(n+1)/2 instead of n² second-contraction dots."""
+    n = model.n
+    iu, ju, _ = triu_pack(n)
     C = stage_constants(model, dtype)
+    Qtri = C.Q[iu, ju]
     if model.is_linear:
         x_pred = jnp.einsum("ij,kj->ki", C.F, x)
         FP = jnp.einsum("ij,kjl->kil", C.F, P)
-        P_pred = jnp.einsum("kil,jl->kij", FP, C.F) + C.Q
+        tri = jnp.einsum("ktl,tl->kt", FP[:, iu, :], C.F[ju, :]) + Qtri
     else:
         x_pred = model.predict_mean(x)
         Fk = model.jacobian(x)
         FP = jnp.einsum("kij,kjl->kil", Fk, P)
-        P_pred = jnp.einsum("kil,kjl->kij", FP, Fk) + C.Q
+        tri = jnp.einsum("ktl,ktl->kt", FP[:, iu, :], Fk[:, ju, :]) + Qtri
+    P_pred = sym_unpack(tri, n)
     z_pred = jnp.einsum("mi,ki->km", C.H, x_pred)
     PHt = jnp.einsum("kij,mj->kim", P_pred, C.H)
     S = jnp.einsum("mi,kij,nj->kmn", C.H, P_pred, C.H) + C.R
@@ -82,15 +93,20 @@ def _predict_lanes(model: FilterModel, x: jnp.ndarray, P: jnp.ndarray,
 def _kalman_update_lanes(model: FilterModel, x_pred, P_pred, zk, PHt, Sinv,
                          dtype=jnp.float32):
     """Subtract-free (H_neg, paper §IV-B) batched measurement update for
-    (C, n) lanes, consuming the precomputed P·Hᵀ and S^{-1}."""
+    (C, n) lanes, consuming the precomputed P·Hᵀ and S^{-1}. The
+    posterior covariance P̂ + K·(H_neg·P̂) is emitted upper-triangle-only
+    with aliased mirrors (exact symmetry — replaces the old
+    0.5·(P + Pᵀ) averaging pass, see ``_predict_lanes``)."""
+    n = model.n
+    iu, ju, _ = triu_pack(n)
     C = stage_constants(model, dtype)
     y = zk + jnp.einsum("mi,ki->km", C.H_neg, x_pred)
     K = jnp.einsum("kim,kmn->kin", PHt, Sinv)
     x_new = x_pred + jnp.einsum("kin,kn->ki", K, y)
     HnP = jnp.einsum("mi,kij->kmj", C.H_neg, P_pred)
-    P_new = P_pred + jnp.einsum("kim,kmj->kij", K, HnP)
-    P_new = 0.5 * (P_new + jnp.swapaxes(P_new, -1, -2))
-    return x_new, P_new
+    tri = (P_pred[:, iu, ju]
+           + jnp.einsum("ktm,kmt->kt", K[:, iu, :], HnP[:, :, ju]))
+    return x_new, sym_unpack(tri, n)
 
 
 def predict_bank(model: FilterModel, bank: BankState,
@@ -143,11 +159,24 @@ def update_bank(model: FilterModel, bank: BankState, z: jnp.ndarray,
     upd = has_z & bank.active
     x_out = jnp.where(upd[:, None], x_new, x_pred)
     P_out = jnp.where(upd[:, None, None], P_new, P_pred)
+    hits, misses, age = lifecycle_counters(bank, assoc)
+    return bank._replace(x=x_out, P=P_out, hits=hits, misses=misses, age=age)
+
+
+def lifecycle_counters(bank, assoc: jnp.ndarray):
+    """The per-slot hit/miss/age advance for one frame, from the
+    association result: assoc (C,) measurement index or -1. The ONE
+    definition of this algebra — ``update_bank``/``update_imm_bank``
+    interleave it with the measurement update, and the tracker's fused
+    route (where the kernel owns the state update and XLA only advances
+    the integer counters) applies it standalone. Returns (hits, misses,
+    age)."""
+    upd = (assoc >= 0) & bank.active
     hits = jnp.where(upd, bank.hits + 1, bank.hits)
     misses = jnp.where(upd, 0, jnp.where(bank.active, bank.misses + 1,
                                          bank.misses))
     age = jnp.where(bank.active, bank.age + 1, bank.age)
-    return bank._replace(x=x_out, P=P_out, hits=hits, misses=misses, age=age)
+    return hits, misses, age
 
 
 def _spawn_plan(active: jnp.ndarray, unassigned: jnp.ndarray):
@@ -299,21 +328,50 @@ def predict_imm_bank(imm: IMMModel, bank: IMMBankState, dtype=jnp.float32):
 
 
 def update_imm_bank(imm: IMMModel, bank: IMMBankState, z: jnp.ndarray,
-                    assoc: jnp.ndarray, z_pred: jnp.ndarray,
-                    PHt: jnp.ndarray, Sinv: jnp.ndarray, S: jnp.ndarray,
-                    cbar: jnp.ndarray, dtype=jnp.float32) -> IMMBankState:
+                    assoc: jnp.ndarray,
+                    z_pred: Optional[jnp.ndarray] = None,
+                    PHt: Optional[jnp.ndarray] = None,
+                    Sinv: Optional[jnp.ndarray] = None,
+                    S: Optional[jnp.ndarray] = None,
+                    cbar: Optional[jnp.ndarray] = None,
+                    dtype=jnp.float32) -> IMMBankState:
     """K model-conditioned measurement updates + the mode posterior.
 
     z: (M, m) padded measurements; assoc: (C,) measurement index or -1.
     z_pred/PHt/Sinv/S are the (K, ...) innovation quantities from
-    ``predict_imm_bank`` — nothing is rebuilt or re-inverted here; the
-    mode likelihoods reuse the same S^{-1} as the Kalman gains
-    (``gaussian_loglik``). Associated slots get the Bayes posterior
+    ``predict_imm_bank`` — pass them through (as ``imm_frame_step``
+    does) so nothing is rebuilt or re-inverted here; the mode
+    likelihoods reuse the same S^{-1} as the Kalman gains
+    (``gaussian_loglik``). The None fallback recomputes any missing
+    quantity from the predicted bank for standalone use (``bank`` must
+    be the POST-predict state; its ``mu`` is still the pre-mix
+    distribution, so cbar is recoverable from the Markov chain) — same
+    expressions as ``_predict_lanes``, so the fallback is bit-identical
+    to the pass-through. Associated slots get the Bayes posterior
     mu ∝ cbar·N(y; 0, S); coasting slots keep the Markov-predicted cbar
     (which stays normalized — no renormalization drift while a track
     coasts). Lifecycle counters advance once per slot, not per model.
     """
     m = imm.m
+    # each missing quantity recomputes independently — a caller short
+    # only of cbar pays no innovation einsums at all
+    consts = ([stage_constants(model, dtype) for model in imm.models]
+              if z_pred is None or PHt is None or S is None else None)
+    if z_pred is None:
+        z_pred = jnp.stack([jnp.einsum("mi,ki->km", Ck.H, bank.x[k])
+                            for k, Ck in enumerate(consts)])
+    if PHt is None:
+        PHt = jnp.stack([jnp.einsum("kij,mj->kim", bank.P[k], Ck.H)
+                         for k, Ck in enumerate(consts)])
+    if S is None:
+        # S feeds the likelihood normalizer even when Sinv is given
+        S = jnp.stack([jnp.einsum("mi,kij,nj->kmn", Ck.H, bank.P[k], Ck.H)
+                       + Ck.R
+                       for k, Ck in enumerate(consts)])
+    if Sinv is None:
+        Sinv = small_inv(S, m)
+    if cbar is None:
+        cbar = bank.mu @ jnp.asarray(imm.trans, dtype)
     has_z = assoc >= 0
     zk = z[jnp.clip(assoc, 0, z.shape[0] - 1)]  # (C, m), garbage where -1
     x_new, P_new, loglik = [], [], []
@@ -332,10 +390,7 @@ def update_imm_bank(imm: IMMModel, bank: IMMBankState, z: jnp.ndarray,
     x_out = jnp.where(upd[None, :, None], x_new, bank.x)
     P_out = jnp.where(upd[None, :, None, None], P_new, bank.P)
     mu_out = jnp.where(upd[:, None], mu_post, cbar)
-    hits = jnp.where(upd, bank.hits + 1, bank.hits)
-    misses = jnp.where(upd, 0, jnp.where(bank.active, bank.misses + 1,
-                                         bank.misses))
-    age = jnp.where(bank.active, bank.age + 1, bank.age)
+    hits, misses, age = lifecycle_counters(bank, assoc)
     return bank._replace(x=x_out, P=P_out, mu=mu_out, hits=hits,
                          misses=misses, age=age)
 

@@ -136,6 +136,35 @@ def inv4(M):
 _SMALL_INV = {1: inv1, 2: inv2, 3: inv3, 4: inv4}
 
 
+@functools.lru_cache(maxsize=None)
+def triu_pack(n: int):
+    """Upper-triangle packing plan for symmetric (..., n, n) einsum
+    products — the einsum-stage analogue of the kernels'
+    symmetrize=True triangle emission (ROADMAP item): compute only the
+    n(n+1)/2 upper entries and reconstitute the full matrix by ALIASING
+    the mirrors (exact symmetry, no averaging pass), cutting the
+    dominant second contraction of F·P·Fᵀ-shaped products by
+    ~n(n-1)/2n² ≈ 44% for n=9.
+
+    Returns (rows, cols, mirror): ``rows``/``cols`` index the packed
+    (i <= j) entries; ``mirror[i, j]`` is the packed index of
+    (min(i,j), max(i,j)), so ``tri[..., mirror]`` is the one gather
+    that unpacks a (..., T) triangle into the (..., n, n) symmetric
+    matrix."""
+    rows, cols = np.triu_indices(n)
+    mirror = np.zeros((n, n), np.int32)
+    for t, (i, j) in enumerate(zip(rows, cols)):
+        mirror[i, j] = mirror[j, i] = t
+    return rows, cols, mirror
+
+
+def sym_unpack(tri, n: int):
+    """(..., n(n+1)/2) packed upper triangle -> (..., n, n) symmetric
+    matrix with aliased mirrors (see ``triu_pack``)."""
+    _, _, mirror = triu_pack(n)
+    return tri[..., mirror]
+
+
 def small_inv(M, dim: int):
     if dim in _SMALL_INV:
         return _SMALL_INV[dim](M)
@@ -457,29 +486,51 @@ def build_batched_lanes(model: FilterModel, N: int, dtype=jnp.float32,
     minor (lane) axis and the per-filter n x n algebra is batched via
     einsum. State: x (N, n); P (N, n, n); z (N, m). Identical numerics
     to ``batched_blockdiag`` at ~N^2 less covariance compute; this is
-    the reference semantics for the ``katana_bank`` Pallas kernel."""
+    the reference semantics for the ``katana_bank`` Pallas kernel.
+
+    Under ``symmetrize`` the covariance products are emitted
+    upper-triangle-only with aliased mirrors (``triu_pack``), the same
+    contract as the kernels' symmetrize=True: exact symmetry at
+    n(n+1)/2 instead of n² second-contraction dots, no averaging pass.
+    ``symmetrize=False`` keeps the faithful full-square emission
+    (asymmetry of the float product preserved) for blockdiag
+    equivalence."""
     n, m = model.n, model.m
     C = stage_constants(model, dtype)
+    iu, ju, _ = triu_pack(n)
 
     def step(x, P, z):
         if model.is_linear:
             x_pred = jnp.einsum("ij,kj->ki", C.F, x)
             FP = jnp.einsum("ij,kjl->kil", C.F, P)
-            P_pred = jnp.einsum("kil,jl->kij", FP, C.F) + C.Q
+            if symmetrize:
+                P_pred = sym_unpack(
+                    jnp.einsum("ktl,tl->kt", FP[:, iu, :], C.F[ju, :])
+                    + C.Q[iu, ju], n)
+            else:
+                P_pred = jnp.einsum("kil,jl->kij", FP, C.F) + C.Q
         else:
             x_pred = model.predict_mean(x)
             Fk = model.jacobian(x)  # (N, n, n)
             FP = jnp.einsum("kij,kjl->kil", Fk, P)
-            P_pred = jnp.einsum("kil,kjl->kij", FP, Fk) + C.Q
+            if symmetrize:
+                P_pred = sym_unpack(
+                    jnp.einsum("ktl,ktl->kt", FP[:, iu, :], Fk[:, ju, :])
+                    + C.Q[iu, ju], n)
+            else:
+                P_pred = jnp.einsum("kil,kjl->kij", FP, Fk) + C.Q
         y = z + jnp.einsum("mi,ki->km", C.H_neg, x_pred)
         PHt = jnp.einsum("kij,mj->kim", P_pred, C.H)
         S = jnp.einsum("mi,kij,nj->kmn", C.H, P_pred, C.H) + C.R
         K = jnp.einsum("kim,kmn->kin", PHt, small_inv(S, m))
         x_new = x_pred + jnp.einsum("kin,kn->ki", K, y)
         HnP = jnp.einsum("mi,kij->kmj", C.H_neg, P_pred)
-        P_new = P_pred + jnp.einsum("kim,kmj->kij", K, HnP)
         if symmetrize:
-            P_new = 0.5 * (P_new + jnp.swapaxes(P_new, -1, -2))
+            P_new = sym_unpack(
+                P_pred[:, iu, ju]
+                + jnp.einsum("ktm,kmt->kt", K[:, iu, :], HnP[:, :, ju]), n)
+        else:
+            P_new = P_pred + jnp.einsum("kim,kmj->kij", K, HnP)
         return x_new, P_new
 
     meta = dict(stage="batched_lanes", layout="batched", n=n, m=m, N=N)

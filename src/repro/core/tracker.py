@@ -49,6 +49,12 @@ class TrackerConfig:
     max_misses: int = 5
     min_hits: int = 3         # confirmations before a track is "real"
     dtype: str = "float32"
+    # Route the frame's measurement cycle (predict + gate + greedy
+    # assignment + update) through the fused ``katana_frame`` /
+    # ``katana_imm_frame`` Pallas dispatch. The einsum path remains the
+    # equivalence oracle (and the automatic fallback for models the
+    # kernel can't serve: non-selector H, nonlinear IMM members).
+    fused_frame: bool = True
 
 
 class FrameResult(NamedTuple):
@@ -102,24 +108,49 @@ def greedy_assign(cost: jnp.ndarray, valid: jnp.ndarray, gate: float,
     return assoc
 
 
+def _use_fused_frame(model, cfg: TrackerConfig) -> bool:
+    from repro.kernels.katana_bank.ops import frame_kernel_supported
+
+    return cfg.fused_frame and frame_kernel_supported(model)
+
+
 def frame_step(model: FilterModel, cfg: TrackerConfig, bank: BankState,
                z: jnp.ndarray, z_valid: jnp.ndarray) -> FrameResult:
-    """One tracking frame. z: (max_meas, m); z_valid: (max_meas,) bool."""
+    """One tracking frame. z: (max_meas, m); z_valid: (max_meas,) bool.
+
+    Under ``cfg.fused_frame`` (the default) the measurement cycle —
+    predict, innovation, gated Mahalanobis cost, greedy assignment,
+    Kalman update — is ONE ``katana_frame`` Pallas dispatch; XLA keeps
+    only the spawn/prune lifecycle bookkeeping. The einsum branch below
+    is the equivalence oracle (identical assoc/ids, float32-tolerance
+    states — tests/test_frame_kernel.py) and the fallback for models
+    outside the kernel's contract."""
     dtype = jnp.dtype(cfg.dtype)
     gate = cfg.gate or CHI2_99.get(model.m, 16.0)
-    bank_p, z_pred, _S, Sinv, PHt = bank_lib.predict_bank(model, bank, dtype)
-    cost = mahalanobis_cost(z_pred, Sinv, z.astype(dtype))
-    valid = bank_p.active[:, None] & z_valid[None, :]
     rounds = min(cfg.capacity, cfg.max_meas)
-    assoc = greedy_assign(cost, valid, jnp.asarray(gate, dtype), rounds)
-    bank_u = bank_lib.update_bank(model, bank_p, z.astype(dtype), assoc,
-                                  PHt, Sinv, dtype)
+    zt = z.astype(dtype)
+    if _use_fused_frame(model, cfg):
+        from repro.kernels.katana_bank.ops import katana_frame
+
+        x2, P2, assoc = katana_frame(model, bank.x, bank.P, zt, z_valid,
+                                     bank.active, gate=float(gate),
+                                     rounds=rounds)
+        hits, misses, age = bank_lib.lifecycle_counters(bank, assoc)
+        bank_u = bank._replace(x=x2, P=P2, hits=hits, misses=misses,
+                               age=age)
+    else:
+        bank_p, z_pred, _S, Sinv, PHt = bank_lib.predict_bank(model, bank,
+                                                              dtype)
+        cost = mahalanobis_cost(z_pred, Sinv, zt)
+        valid = bank_p.active[:, None] & z_valid[None, :]
+        assoc = greedy_assign(cost, valid, jnp.asarray(gate, dtype), rounds)
+        bank_u = bank_lib.update_bank(model, bank_p, zt, assoc, PHt, Sinv,
+                                      dtype)
     taken = jnp.zeros((cfg.max_meas,), bool).at[
         jnp.clip(assoc, 0, cfg.max_meas - 1)
     ].max(assoc >= 0)
     unassigned = z_valid & ~taken
-    bank_s = bank_lib.spawn_tracks(model, bank_u, z.astype(dtype), unassigned,
-                                   dtype)
+    bank_s = bank_lib.spawn_tracks(model, bank_u, zt, unassigned, dtype)
     bank_f = bank_lib.prune_bank(bank_s, cfg.max_misses)
     confirmed = bank_f.active & (bank_f.hits >= cfg.min_hits)
     return FrameResult(bank_f, assoc, unassigned, confirmed)
@@ -139,19 +170,37 @@ def imm_frame_step(imm: IMMModel, cfg: TrackerConfig, bank: IMMBankState,
     right direction. ``FrameResult.mode_probs`` carries the per-track
     mode posterior; ``FrameResult.x_est`` the moment-matched combined
     state (use it instead of ``bank.x``, which is model-conditioned).
+
+    Under ``cfg.fused_frame`` (the default) the whole cycle — mixing,
+    K predicts, the weighted gate, assignment, K updates, mode
+    posterior and the combined estimate — is ONE ``katana_imm_frame``
+    dispatch; XLA keeps spawn/prune and patches the combined estimate
+    of freshly-spawned slots (their combined state IS the seed state).
     """
     dtype = jnp.dtype(cfg.dtype)
     gate = cfg.gate or CHI2_99.get(imm.m, 16.0)
-    bank_p, z_pred, S, Sinv, PHt, cbar = bank_lib.predict_imm_bank(
-        imm, bank, dtype)
-    zt = z.astype(dtype)
-    cost = sum(cbar[:, k, None] * mahalanobis_cost(z_pred[k], Sinv[k], zt)
-               for k in range(imm.K))
-    valid = bank_p.active[:, None] & z_valid[None, :]
     rounds = min(cfg.capacity, cfg.max_meas)
-    assoc = greedy_assign(cost, valid, jnp.asarray(gate, dtype), rounds)
-    bank_u = bank_lib.update_imm_bank(imm, bank_p, zt, assoc, z_pred, PHt,
-                                      Sinv, S, cbar, dtype)
+    zt = z.astype(dtype)
+    fused = _use_fused_frame(imm, cfg)
+    if fused:
+        from repro.kernels.katana_bank.ops import katana_imm_frame
+
+        x2, P2, mu2, x_c, assoc = katana_imm_frame(
+            imm, bank.x, bank.P, bank.mu, zt, z_valid, bank.active,
+            gate=float(gate), rounds=rounds)
+        hits, misses, age = bank_lib.lifecycle_counters(bank, assoc)
+        bank_u = bank._replace(x=x2, P=P2, mu=mu2, hits=hits,
+                               misses=misses, age=age)
+    else:
+        bank_p, z_pred, S, Sinv, PHt, cbar = bank_lib.predict_imm_bank(
+            imm, bank, dtype)
+        cost = sum(cbar[:, k, None] * mahalanobis_cost(z_pred[k], Sinv[k],
+                                                       zt)
+                   for k in range(imm.K))
+        valid = bank_p.active[:, None] & z_valid[None, :]
+        assoc = greedy_assign(cost, valid, jnp.asarray(gate, dtype), rounds)
+        bank_u = bank_lib.update_imm_bank(imm, bank_p, zt, assoc, z_pred,
+                                          PHt, Sinv, S, cbar, dtype)
     taken = jnp.zeros((cfg.max_meas,), bool).at[
         jnp.clip(assoc, 0, cfg.max_meas - 1)
     ].max(assoc >= 0)
@@ -159,7 +208,14 @@ def imm_frame_step(imm: IMMModel, cfg: TrackerConfig, bank: IMMBankState,
     bank_s = bank_lib.spawn_imm_tracks(imm, bank_u, zt, unassigned, dtype)
     bank_f = bank_lib.prune_bank(bank_s, cfg.max_misses)
     confirmed = bank_f.active & (bank_f.hits >= cfg.min_hits)
-    x_est, _ = imm_combine(bank_f.x, bank_f.P, bank_f.mu)
+    if fused:
+        # the kernel's moment-matched combination covers every surviving
+        # slot; a slot spawned THIS frame seeds all modes identically,
+        # so its combined state is exactly the seed (model-0 slab)
+        spawned = bank_s.active & ~bank_u.active
+        x_est = jnp.where(spawned[:, None], bank_f.x[0], x_c)
+    else:
+        x_est, _ = imm_combine(bank_f.x, bank_f.P, bank_f.mu)
     return FrameResult(bank_f, assoc, unassigned, confirmed,
                        mode_probs=bank_f.mu, x_est=x_est)
 

@@ -23,7 +23,7 @@ GEMM-only pipeline could not:
   * the CTRA Jacobian's sparsity (7 off-identity entries) makes
     F P F^T cost O(nnz·n) lane-ops instead of n^3.
 
-Four kernel shapes share the same emitted step math:
+Six kernel shapes share the same emitted step math:
 
   ``make_kernel``       one predict+update per pallas_call (the
         original per-frame dispatch, still used for single-frame
@@ -60,6 +60,17 @@ Four kernel shapes share the same emitted step math:
         slices; shared F/Q/R entries and the (K, K) Markov transition
         matrix fold to trace-time Python floats, model-varying entries
         to loop-invariant lane vectors.
+  ``make_frame_kernel`` / ``make_imm_frame_kernel``  the LIVE serving
+        frame: predict, innovation + cofactor S^{-1}, the gated
+        Mahalanobis cost tile, the greedy assignment (wave-scheduled
+        masked argmins over the (M, C) tile, exact vs the sequential
+        reference) and the measurement update of the assigned lanes
+        (IMM: + mixing, per-lane log-likelihood, mode posterior and
+        the moment-matched combined estimate) — the entire closed-loop
+        measurement cycle of ``tracker.frame_step`` in ONE dispatch,
+        with only spawn/prune lifecycle bookkeeping left in XLA. The
+        assignment is a global argmin, so these kernels run grid=(1,)
+        over the whole bank instead of tiling the lane axis.
 
 Layout: struct-of-arrays, lanes-minor —
   x (n, N), P (n, n, N), z (m, N) / zs (T, m, N); grid tiles N by
@@ -314,7 +325,23 @@ def _emit_predict_cov(F, P, Q, n, sym):
     return Pp
 
 
-def _emit_update(xp, Pp, z, R, obs, n, m, symmetrize, with_loglik):
+def _emit_innovation(Pp, R, obs, n, m):
+    """Innovation quantities from the predicted covariance, on lane
+    vectors: S = P̂[obs][obs] + R (pure selection for selector H — no
+    GEMM), its cofactor inverse, and P̂·Hᵀ (a column selection).
+    Returns (S, Sinv, PHt). Split out of ``_emit_update`` so the fused
+    frame kernel can aim the SAME S^{-1} at the gating cost tile and
+    the Kalman gain — one cofactor inversion per (model, frame), the
+    tracker's single-pass discipline emitted in-kernel."""
+    S = [[Pp[obs[r]][obs[c]] + R[r][c] if not _is_zero(R[r][c])
+          else Pp[obs[r]][obs[c]] for c in range(m)] for r in range(m)]
+    PHt = [[Pp[i][obs[r]] for r in range(m)] for i in range(n)]
+    Sinv = _emit_small_inv(S, m)
+    return S, Sinv, PHt
+
+
+def _emit_update(xp, Pp, z, R, obs, n, m, symmetrize, with_loglik,
+                 inno=None):
     """The fused measurement update on lane vectors (paper §IV-B/C):
     subtract-free innovation (sign folded at trace time), selector-H
     covariance selection instead of H P Hᵀ GEMMs, cofactor S^{-1}.
@@ -324,14 +351,13 @@ def _emit_update(xp, Pp, z, R, obs, n, m, symmetrize, with_loglik):
 
     With ``with_loglik`` also emits log N(y; 0, S) per lane from the
     same S^{-1} (+ a closed-form det) — the IMM mode likelihood.
+    ``inno`` passes through precomputed ``_emit_innovation`` results
+    (the frame kernels, whose gating already paid for them).
     """
     # y = z + H_neg x̂  (Opt-1: sign folded at trace time)
     y = [z[r] - xp[obs[r]] for r in range(m)]
-    # S = P[obs][obs] + R — pure selection
-    S = [[Pp[obs[r]][obs[c]] + R[r][c] if not _is_zero(R[r][c])
-          else Pp[obs[r]][obs[c]] for c in range(m)] for r in range(m)]
-    PHt = [[Pp[i][obs[r]] for r in range(m)] for i in range(n)]
-    Sinv = _emit_small_inv(S, m)
+    S, Sinv, PHt = (inno if inno is not None
+                    else _emit_innovation(Pp, R, obs, n, m))
     K = [[None] * m for _ in range(n)]
     for i in range(n):
         for r in range(m):
@@ -561,6 +587,288 @@ def _emit_mode_posterior(cbar_parts, ll, K, tt):
         s = s + ws[k]
     r = 1.0 / s
     return [wk * r for wk in ws]
+
+
+def _col(v):
+    """Lane entry -> (1, lane) row for broadcasting against an
+    (M, lane) tile (python floats pass through)."""
+    return v if isinstance(v, (int, float)) else v[None, :]
+
+
+def _emit_cost_tile(z_pred, Sinv, z_rows, m):
+    """Squared-Mahalanobis cost tile on lanes-minor layout:
+    d[j, c] = yᵀ S_c^{-1} y with y = z_j − ẑ_c. ``z_pred``/``Sinv``
+    entries are (lane,) vectors, ``z_rows[r]`` the (M,) r-th coordinate
+    of every measurement. Returns the (M, lane) tile, contracted in the
+    same order as ``tracker.mahalanobis_cost`` (S^{-1}·y, then y·) so
+    the fused and einsum gates see the same float32 rounding."""
+    y = [z_rows[r][:, None] - _col(z_pred[r]) for r in range(m)]  # (M, lane)
+    d = None
+    for r in range(m):
+        Sy = None
+        for c in range(m):
+            t = _col(Sinv[r][c]) * y[c]
+            Sy = t if Sy is None else Sy + t
+        t = y[r] * Sy
+        d = t if d is None else d + t
+    return d
+
+
+_BIG = float(np.finfo(np.float32).max)
+
+
+def _emit_greedy_assign(cost, act, zval, gate, rounds):
+    """Globally-ordered greedy assignment emitted in-kernel, on the
+    (M, lane) cost tile (tracks lanes-minor). Exactly
+    ``tracker.greedy_assign`` — same gate, same first-occurrence
+    (track-major) tie-break, same -1 padding — but wave-scheduled:
+
+    every trip of the loop commits EVERY pair that is simultaneously
+    the first argmin of its track row and of its measurement column.
+    Any such mutual argmin is provably committed by sequential greedy
+    (nothing cheaper can kill its row or column first), committed pairs
+    are pairwise row/col-disjoint by construction, and the surviving
+    matrix is what sequential greedy would also see — so iterating
+    waves reproduces the one-at-a-time result EXACTLY, tie-breaks
+    included, while committing many pairs per trip. The global minimum
+    is always a mutual argmin, so a wave that commits nothing means
+    nothing assignable remains — which makes the early-exit
+    ``while_loop`` exact too: ``rounds`` (= min(C, M), the sequential
+    bound) caps the trip count, but a typical frame converges in a
+    handful of waves instead of paying min(C, M) sequential argmins.
+
+    cost: (M, lane) f32; act: (lane,) 0/1 active-slot mask; zval: (M,)
+    0/1 real-measurement mask; gate/rounds are trace-time constants.
+    Returns assoc (lane,) int32 — measurement index per track or -1.
+    """
+    M, C = cost.shape
+    BIG = jnp.asarray(_BIG, cost.dtype)
+    valid = (act[None, :] > 0) & (zval[:, None] > 0)
+    masked = jnp.where(valid & (cost <= gate), cost, BIG)
+    iM = jax.lax.broadcasted_iota(jnp.int32, (M, C), 0)
+    iC = jax.lax.broadcasted_iota(jnp.int32, (M, C), 1)
+
+    def cond(carry):
+        r, go, _, _ = carry
+        return go & (r < rounds)
+
+    def body(carry):
+        r, _, masked, assoc = carry
+        tmin = masked.min(axis=0)                             # (C,)
+        targ = jnp.argmin(masked, axis=0).astype(jnp.int32)   # (C,) meas
+        marg = jnp.argmin(masked, axis=1).astype(jnp.int32)   # (M,) track
+        # mutual-argmin pairs, gather-free: hit[j, c] <=> row c's first
+        # argmin is j AND column j's first argmin is c
+        hit = (iM == targ[None, :]) & (iC == marg[:, None])
+        commit = hit.any(axis=0) & (tmin < BIG)               # (C,)
+        assoc = jnp.where(commit, targ, assoc)
+        meas_taken = (hit & commit[None, :]).any(axis=1)      # (M,)
+        masked = jnp.where(commit[None, :] | meas_taken[:, None], BIG,
+                           masked)
+        return r + 1, commit.any(), masked, assoc
+
+    assoc0 = jnp.full((C,), -1, jnp.int32)
+    carry = (jnp.int32(0), jnp.asarray(True), masked, assoc0)
+    *_, assoc = jax.lax.while_loop(cond, body, carry)
+    return assoc
+
+
+def _emit_gather_assigned(assoc, z_rows, m):
+    """zk[r] (lane,) = z[assoc, r] via a one-hot contraction (garbage-
+    free: unassigned lanes read 0, and their update is select-masked
+    away downstream — no dynamic gather, the shape class TPU lanes
+    like)."""
+    M = z_rows[0].shape[0]
+    iM = jax.lax.broadcasted_iota(jnp.int32, (M, assoc.shape[0]), 0)
+    onehot = (iM == assoc[None, :]).astype(z_rows[0].dtype)   # (M, lane)
+    return [jnp.sum(onehot * z_rows[r][:, None], axis=0) for r in range(m)]
+
+
+def make_frame_kernel(model: FilterModel, gate: float, rounds: int,
+                      symmetrize: bool = True):
+    """Build the fused FRAME kernel body: the entire single-model
+    measurement cycle — predict, innovation + cofactor S^{-1}, the
+    gated Mahalanobis cost tile, the greedy assignment waves, and the
+    Kalman update of the assigned lanes — in ONE Pallas dispatch. Only
+    spawn/prune lifecycle bookkeeping stays in XLA (``tracker.frame_step``).
+
+    The S^{-1} emitted for the gate IS the S^{-1} of the Kalman gain
+    (``_emit_innovation``), so the whole frame still performs exactly
+    one cofactor inversion per model. The greedy rounds run as an
+    in-kernel ``while_loop`` over the (M, lane) cost tile
+    (``_emit_greedy_assign``) — the assignment is a global argmin, so
+    the frame kernel runs as a single program over the whole bank
+    (grid=(1,)) rather than tiling the lane axis.
+
+    Inputs: x (n, C), P (n, n, C), z (m, M), z_valid (1, M) 0/1,
+    active (1, C) 0/1. Outputs: x' (n, C), P' (n, n, C) — predicted
+    values where a lane got no measurement, updated where it did —
+    and assoc (1, C) int32.
+    """
+    n, m = model.n, model.m
+    obs = _check_selector(model)
+    Rtab = _mat_from_np(np.asarray(model.R, np.float64))
+    pred = make_predict_fn(model, symmetrize)
+
+    def kernel(x_ref, P_ref, z_ref, zv_ref, act_ref, x_out, P_out, a_out):
+        lane = x_ref[0, :]
+        xv = [x_ref[i, :] for i in range(n)]
+        P = [[P_ref[i, j, :] for j in range(n)] for i in range(n)]
+        xp, Pp = pred(xv, P)
+        inno = _emit_innovation(Pp, Rtab, obs, n, m)
+        _, Sinv, _ = inno
+        z_rows = [z_ref[r, :] for r in range(m)]              # (M,)
+        z_pred = [xp[obs[r]] for r in range(m)]
+        cost = _emit_cost_tile(z_pred, Sinv, z_rows, m)       # (M, C)
+        assoc = _emit_greedy_assign(cost, act_ref[0, :], zv_ref[0, :],
+                                    gate, rounds)
+        zk = _emit_gather_assigned(assoc, z_rows, m)
+        xn, Pn = _emit_update(xp, Pp, zk, Rtab, obs, n, m, symmetrize,
+                              False, inno=inno)
+        upd = (assoc >= 0) & (act_ref[0, :] > 0)
+        for i in range(n):
+            x_out[i, :] = jnp.where(upd, _bc(xn[i], lane), _bc(xp[i], lane))
+            for j in range(n):
+                P_out[i, j, :] = jnp.where(upd, _bc(Pn[i][j], lane),
+                                           _bc(Pp[i][j], lane))
+        a_out[0, :] = assoc
+
+    return kernel
+
+
+def make_imm_frame_kernel(models, trans, gate: float, rounds: int,
+                          symmetrize: bool = True):
+    """Build the fused IMM FRAME kernel body: mixing, the K
+    model-conditioned predicts, innovation + cofactor S^{-1} per model,
+    the cbar-weighted gated cost tile, the greedy assignment waves, the
+    K Kalman updates + per-lane log-likelihoods, the mode posterior and
+    the moment-matched combined estimate — the whole multi-model
+    measurement cycle in ONE dispatch; only spawn/prune stays in XLA
+    (``tracker.imm_frame_step``).
+
+    Layout matches ``make_imm_scan_kernel``: blocks arrive as
+    x (K, n, C), P (K, n, n, C), mu (K, C) and flatten in-kernel to
+    model-major (K·C,) lanes, so the mixing reaches across models with
+    static slices and the K predict+updates emit ONE op stream
+    (shared F/Q/R entries fold to trace-time floats via
+    ``plan_imm_tables``; varying entries become loop-invariant lane
+    vectors). The gate weighs each model's Mahalanobis distance by the
+    Markov-predicted cbar — exactly ``tracker.imm_frame_step``'s
+    mode-probability-weighted gate. Coasting lanes (no measurement)
+    keep the predicted x̂/P̂ and the Markov-predicted cbar, matching
+    ``bank.update_imm_bank``.
+
+    K=1 skips the mixing/posterior arithmetic and emits exactly
+    ``make_frame_kernel``'s op stream with a passthrough mu — the
+    degenerate IMM reduces to the plain fused frame, nonlinear (EKF)
+    members included.
+
+    Inputs: x (K, n, C), P (K, n, n, C), mu (K, C), z (m, M),
+    z_valid (1, M) 0/1, active (1, C) 0/1. Outputs: x' (K, n, C),
+    P' (K, n, n, C), mu' (K, C), x_c (n, C) combined estimates,
+    assoc (1, C) int32.
+    """
+    K = len(models)
+    n, m = models[0].n, models[0].m
+    obs = _check_selector(models[0])
+    if K == 1:
+        pred = make_predict_fn(models[0], symmetrize)
+        entries = V = None
+        Rtab0 = _mat_from_np(np.asarray(models[0].R, np.float64))
+    else:
+        for mdl in models:
+            if not mdl.is_linear:
+                raise NotImplementedError(
+                    "multi-model katana_imm_frame requires linear member "
+                    "models (constant F tables); got " + mdl.name)
+            assert (mdl.n, mdl.m) == (n, m)
+            assert _check_selector(mdl) == obs
+        entries, V = plan_imm_tables(models)
+        pred = Rtab0 = None
+    Pi = [[float(v) for v in row] for row in np.asarray(trans, np.float64)]
+
+    def kernel(x_ref, P_ref, mu_ref, z_ref, zv_ref, act_ref,
+               x_out, P_out, mu_out, xc_out, a_out):
+        tt = x_ref.shape[-1]
+        L = K * tt
+        mu = mu_ref[:, :].reshape(L)
+        proto = mu
+        xv = [x_ref[:, i, :].reshape(L) for i in range(n)]
+        P = [[P_ref[:, i, j, :].reshape(L) for j in range(n)]
+             for i in range(n)]
+        act = act_ref[0, :] > 0                              # (tt,)
+        z_rows = [z_ref[r, :] for r in range(m)]             # (M,)
+        if K == 1:
+            xp, Pp = pred(xv, P)
+            inno = _emit_innovation(Pp, Rtab0, obs, n, m)
+            _, Sinv, _ = inno
+            cost = _emit_cost_tile([xp[obs[r]] for r in range(m)], Sinv,
+                                   z_rows, m)
+            assoc = _emit_greedy_assign(cost, act_ref[0, :], zv_ref[0, :],
+                                        gate, rounds)
+            zk = _emit_gather_assigned(assoc, z_rows, m)
+            xn, Pn = _emit_update(xp, Pp, zk, Rtab0, obs, n, m, symmetrize,
+                                  False, inno=inno)
+            upd = (assoc >= 0) & act
+            mu_parts = cbar_parts = None
+        else:
+            dt_ = proto.dtype
+            tabv = [jnp.concatenate([jnp.full((tt,), float(v), dt_)
+                                     for v in row]) for row in V]
+            Ftab, Qtab, Rtab = (_resolve_mat(entries[nm], tabv)
+                                for nm in ("F", "Q", "R"))
+            x_mix, P_mix, cbar_parts = _emit_imm_mix(
+                xv, P, mu, Pi, n, K, tt, symmetrize)
+            xp = _emit_matvec(Ftab, x_mix, n)
+            Pp = _emit_predict_cov(Ftab, P_mix, Qtab, n, symmetrize)
+            inno = _emit_innovation(Pp, Rtab, obs, n, m)
+            _, Sinv, _ = inno
+            d = _emit_cost_tile([xp[obs[r]] for r in range(m)], Sinv,
+                                z_rows, m)                   # (M, K·tt)
+            # cbar-weighted gate: sum_k cbar_k · d_k, folded over slabs
+            cost = None
+            for k in range(K):
+                t = _col(cbar_parts[k]) * d[:, k * tt:(k + 1) * tt]
+                cost = t if cost is None else cost + t
+            assoc = _emit_greedy_assign(cost, act_ref[0, :], zv_ref[0, :],
+                                        gate, rounds)
+            zk1 = _emit_gather_assigned(assoc, z_rows, m)    # (tt,) each
+            zk = [jnp.concatenate([q] * K) for q in zk1]
+            xn, Pn, ll = _emit_update(xp, Pp, zk, Rtab, obs, n, m,
+                                      symmetrize, True, inno=inno)
+            mu_parts = _emit_mode_posterior(cbar_parts, ll, K, tt)
+            upd = (assoc >= 0) & act
+        # coasting select, exactly bank.update_imm_bank: predicted x̂/P̂
+        # where a lane got no measurement, mu <- the Markov cbar
+        uL = upd if K == 1 else jnp.concatenate([upd] * K)
+        xs = [jnp.where(uL, _bc(xn[i], proto), _bc(xp[i], proto))
+              for i in range(n)]
+        Ps = [[None] * n for _ in range(n)]
+        for i in range(n):
+            for j in (range(i, n) if symmetrize else range(n)):
+                Ps[i][j] = jnp.where(uL, _bc(Pn[i][j], proto),
+                                     _bc(Pp[i][j], proto))
+                if symmetrize:
+                    Ps[j][i] = Ps[i][j]
+        lane1 = act_ref[0, :]                                # float (tt,)
+        if K == 1:
+            mu_sel = [mu]
+            xc = xs
+        else:
+            mu_sel = [jnp.where(upd, _bc(mu_parts[k], lane1),
+                                _bc(cbar_parts[k], lane1)) for k in range(K)]
+            xc = [_emit_dot(mu_sel,
+                            [u[k * tt:(k + 1) * tt] for k in range(K)], K)
+                  for u in xs]
+        mu_out[:, :] = jnp.stack([_bc(p, lane1) for p in mu_sel])
+        for i in range(n):
+            x_out[:, i, :] = xs[i].reshape(K, tt)
+            xc_out[i, :] = _bc(xc[i], lane1)
+            for j in range(n):
+                P_out[:, i, j, :] = Ps[i][j].reshape(K, tt)
+        a_out[0, :] = assoc
+
+    return kernel
 
 
 def make_kernel(model: FilterModel, symmetrize: bool = True):
@@ -965,3 +1273,127 @@ def katana_bank_imm_scan_step(imm, x, P, mu, zs, vs=None,
         ],
         interpret=interpret,
     )(*args)
+
+
+@functools.partial(jax.jit, static_argnames=("model", "gate", "rounds",
+                                             "symmetrize", "interpret"))
+def katana_frame_step(model: FilterModel, x, P, z, zval, act, gate: float,
+                      rounds: int, symmetrize: bool = True,
+                      interpret: bool = True):
+    """Whole-frame fused dispatch: predict + gate + greedy-assign +
+    update in one pallas_call.
+
+    x: (n, C); P: (n, n, C); z: (m, M); zval: (1, M) 0/1; act: (1, C)
+    0/1 — lanes-minor (SoA). Returns (x' (n, C), P' (n, n, C),
+    assoc (1, C) int32). The greedy assignment is a GLOBAL argmin over
+    the (M, C) cost tile, so the grid is (1,): one program holds the
+    whole bank (C·n² f32 ≈ 0.3 MB at C=1024 for n=9 — comfortably
+    VMEM-resident; the frame kernel trades the scan kernels' lane
+    tiling for whole-bank visibility)."""
+    n, m = model.n, model.m
+    C = x.shape[-1]
+    M = z.shape[-1]
+    kern = make_frame_kernel(model, gate, rounds, symmetrize)
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, C), lambda i: (0, 0)),
+            pl.BlockSpec((n, n, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((m, M), lambda i: (0, 0)),
+            pl.BlockSpec((1, M), lambda i: (0, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, C), lambda i: (0, 0)),
+            pl.BlockSpec((n, n, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, C), x.dtype),
+            jax.ShapeDtypeStruct((n, n, C), P.dtype),
+            jax.ShapeDtypeStruct((1, C), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, P, z, zval, act)
+
+
+@functools.partial(jax.jit, static_argnames=("imm", "gate", "rounds",
+                                             "symmetrize", "interpret"))
+def katana_imm_frame_step(imm, x, P, mu, z, zval, act, gate: float,
+                          rounds: int, symmetrize: bool = True,
+                          interpret: bool = True):
+    """Whole-frame fused IMM dispatch: mix + K predicts + cbar-weighted
+    gate + greedy-assign + K updates + mode posterior + combined
+    estimate in one pallas_call.
+
+    x: (K, n, C); P: (K, n, n, C); mu: (K, C); z: (m, M); zval: (1, M)
+    0/1; act: (1, C) 0/1 — track axis lanes-minor, model-major flatten
+    in-kernel (the ``make_imm_scan_kernel`` layout). Returns
+    (x' (K, n, C), P' (K, n, n, C), mu' (K, C), x_c (n, C),
+    assoc (1, C) int32). grid=(1,) for the same global-argmin reason as
+    ``katana_frame_step``."""
+    K, n, m = imm.K, imm.n, imm.m
+    C = x.shape[-1]
+    M = z.shape[-1]
+    kern = make_imm_frame_kernel(imm.models, imm.trans, gate, rounds,
+                                 symmetrize)
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((K, n, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((K, n, n, C), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((K, C), lambda i: (0, 0)),
+            pl.BlockSpec((m, M), lambda i: (0, 0)),
+            pl.BlockSpec((1, M), lambda i: (0, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((K, n, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((K, n, n, C), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((K, C), lambda i: (0, 0)),
+            pl.BlockSpec((n, C), lambda i: (0, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, n, C), x.dtype),
+            jax.ShapeDtypeStruct((K, n, n, C), P.dtype),
+            jax.ShapeDtypeStruct((K, C), mu.dtype),
+            jax.ShapeDtypeStruct((n, C), x.dtype),
+            jax.ShapeDtypeStruct((1, C), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, P, mu, z, zval, act)
+
+
+@functools.partial(jax.jit, static_argnames=("gate", "rounds", "interpret"))
+def greedy_assign_step(cost, valid, gate: float, rounds: int,
+                       interpret: bool = True):
+    """Standalone dispatch of the in-kernel greedy assignment
+    (``_emit_greedy_assign``) for direct equivalence testing against
+    ``tracker.greedy_assign``: cost (M, C) lanes-minor, valid (M, C)
+    0/1 -> assoc (1, C) int32."""
+    M, C = cost.shape
+
+    def kern(cost_ref, valid_ref, a_out):
+        cost = cost_ref[:, :]
+        # fold the 2-D pair validity through the per-axis masks the
+        # frame kernels use: rows of an all-ones act/zval, entrywise
+        # invalid pairs pushed past the gate
+        vbad = valid_ref[:, :] <= 0
+        big = jnp.asarray(_BIG, cost.dtype)
+        cost = jnp.where(vbad, big, cost)
+        ones_c = jnp.ones((C,), cost.dtype)
+        ones_m = jnp.ones((M,), cost.dtype)
+        a_out[0, :] = _emit_greedy_assign(cost, ones_c, ones_m, gate, rounds)
+
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((M, C), lambda i: (0, 0)),
+                  pl.BlockSpec((M, C), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, C), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, C), jnp.int32),
+        interpret=interpret,
+    )(cost, valid)

@@ -26,6 +26,14 @@ Dispatch granularities:
         between kernel dispatches. Kept as the independently-built
         equivalence oracle for ``katana_imm_sequence`` (both paths
         require linear member models for K > 1).
+  ``katana_frame`` / ``katana_imm_frame``  the LIVE serving frame:
+        predict + gated Mahalanobis cost + greedy assignment + update
+        (IMM: + mixing, mode posterior, combined estimate) in ONE
+        dispatch — what ``tracker.frame_step`` / ``imm_frame_step``
+        route through under ``TrackerConfig.fused_frame``; only
+        spawn/prune lifecycle bookkeeping stays in XLA.
+  ``katana_greedy_assign`` the in-kernel assignment standalone, for
+        equivalence testing against ``tracker.greedy_assign``.
 
 ``interpret=True`` everywhere in this container (CPU); on a real TPU
 pass interpret=False — the kernels and BlockSpecs are TPU-shaped.
@@ -42,12 +50,21 @@ from repro.core.filters import FilterModel, IMMModel
 from repro.core.rewrites import imm_combine, imm_mix, imm_mode_posterior
 from repro.kernels.katana_bank.kernel import (
     LANE_TILE,
+    _selector_rows,
+    greedy_assign_step,
     katana_bank_imm_scan_step,
     katana_bank_imm_step,
     katana_bank_scan_step,
     katana_bank_step,
+    katana_frame_step,
+    katana_imm_frame_step,
     plan_imm_tables,
 )
+
+# the frame kernels run grid=(1,) over the whole bank, so the lane pad
+# only needs to keep the minor axis register-friendly — 128, not the
+# scan kernels' per-program LANE_TILE
+FRAME_LANE_PAD = 128
 
 
 def _pad_to(x, N_pad, axis=-1):
@@ -126,6 +143,104 @@ def katana_bank_soa(model: FilterModel, x, P, z, **kw):
     """SoA entry point for callers that keep the lane layout end-to-end
     (the serving engine's resident bank)."""
     return katana_bank_step(model, x, P, z, **kw)
+
+
+def frame_kernel_supported(model) -> bool:
+    """True when the fused frame kernel can serve this model: selector
+    measurement matrix (every H row a unit vector), and — for a K>1
+    IMM — linear member models (constant F tables). The tracker's
+    ``fused_frame`` flag falls back to the einsum path when this is
+    False, so a general-H or nonlinear-member configuration still
+    tracks, just not in one dispatch."""
+    if isinstance(model, IMMModel):
+        return (_selector_rows(np.asarray(model.H)) is not None
+                and (model.K == 1
+                     or all(mdl.is_linear for mdl in model.models)))
+    return _selector_rows(np.asarray(model.H)) is not None
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "gate", "rounds", "symmetrize",
+                                    "interpret"))
+def katana_frame(model: FilterModel, x, P, z, z_valid, active, gate: float,
+                 rounds: int, symmetrize: bool = True,
+                 interpret: bool = True):
+    """Fused live tracking frame: the whole measurement cycle of
+    ``tracker.frame_step`` — predict, gate, greedy assignment, update —
+    as ONE kernel dispatch.
+
+    x: (C, n); P: (C, n, n); z: (M, m) padded measurements;
+    z_valid: (M,) bool; active: (C,) bool; ``gate``/``rounds`` are the
+    tracker's (static) chi-square gate and assignment-round bound.
+    Returns (x' (C, n), P' (C, n, n), assoc (C,) int32) — predicted
+    state where a slot got no measurement, updated where it did, and
+    the per-slot measurement index (or -1), byte-identical semantics to
+    the einsum path's ``greedy_assign``. Spawn/prune stay with the
+    caller. Padding lanes ride along inactive (their zero P predicts to
+    P̂ = Q, so S = Q[obs][obs] + R stays invertible) and are sliced
+    off."""
+    C = x.shape[0]
+    C_pad = -(-C // FRAME_LANE_PAD) * FRAME_LANE_PAD
+    xs = _pad_to(x.T, C_pad)
+    Ps = _pad_to(P.transpose(1, 2, 0), C_pad)
+    act = _pad_to(active.astype(x.dtype)[None, :], C_pad)
+    zs = z.T                                           # (m, M)
+    zv = z_valid.astype(x.dtype)[None, :]
+    x2, P2, assoc = katana_frame_step(model, xs, Ps, zs, zv, act,
+                                      gate=gate, rounds=rounds,
+                                      symmetrize=symmetrize,
+                                      interpret=interpret)
+    return (x2[:, :C].T, P2[:, :, :C].transpose(2, 0, 1), assoc[0, :C])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("imm", "gate", "rounds", "symmetrize",
+                                    "interpret"))
+def katana_imm_frame(imm: IMMModel, x, P, mu, z, z_valid, active,
+                     gate: float, rounds: int, symmetrize: bool = True,
+                     interpret: bool = True):
+    """Fused live IMM tracking frame (the multi-model ``katana_frame``):
+    mixing, K model-conditioned predicts, the cbar-weighted gate, greedy
+    assignment, K updates + log-likelihoods, mode posterior and the
+    moment-matched combined estimate in ONE dispatch.
+
+    x: (K, C, n); P: (K, C, n, n); mu: (C, K); z: (M, m);
+    z_valid: (M,) bool; active: (C,) bool. Returns (x' (K, C, n),
+    P' (K, C, n, n), mu' (C, K), x_c (C, n) combined estimates,
+    assoc (C,) int32). Coasting slots keep the predicted x̂/P̂ and the
+    Markov-predicted cbar, exactly ``bank.update_imm_bank``; spawn and
+    prune stay with the caller (``tracker.imm_frame_step``). Padding
+    lanes get a uniform mode distribution so their (discarded)
+    posterior algebra stays finite."""
+    K, C, n = x.shape
+    C_pad = -(-C // FRAME_LANE_PAD) * FRAME_LANE_PAD
+    xs = _pad_to(x.transpose(0, 2, 1), C_pad)          # (K, n, C_pad)
+    Ps = _pad_to(P.transpose(0, 2, 3, 1), C_pad)       # (K, n, n, C_pad)
+    mu_s = jnp.pad(mu.T, ((0, 0), (0, C_pad - C)),
+                   constant_values=1.0 / K)            # (K, C_pad)
+    act = _pad_to(active.astype(x.dtype)[None, :], C_pad)
+    zs = z.T                                           # (m, M)
+    zv = z_valid.astype(x.dtype)[None, :]
+    x2, P2, mu2, xc, assoc = katana_imm_frame_step(
+        imm, xs, Ps, mu_s, zs, zv, act, gate=gate, rounds=rounds,
+        symmetrize=symmetrize, interpret=interpret)
+    return (x2[:, :, :C].transpose(0, 2, 1),
+            P2[:, :, :, :C].transpose(0, 3, 1, 2),
+            mu2[:, :C].T, xc[:, :C].T, assoc[0, :C])
+
+
+@functools.partial(jax.jit, static_argnames=("gate", "rounds", "interpret"))
+def katana_greedy_assign(cost, valid, gate: float, rounds: int,
+                         interpret: bool = True):
+    """The frame kernels' in-kernel greedy assignment as a standalone
+    dispatch, canonical (C, M) layout — the direct test surface for
+    equivalence with ``tracker.greedy_assign``. cost: (C, M);
+    valid: (C, M) bool. Returns assoc (C,) int32."""
+    C, M = cost.shape
+    assoc = greedy_assign_step(cost.T, valid.astype(cost.dtype).T,
+                               gate=gate, rounds=rounds,
+                               interpret=interpret)
+    return assoc[0, :C]
 
 
 def _imm_lane_table(imm: IMMModel, N: int, L_pad: int,

@@ -3,10 +3,16 @@ request server.
 
 One jitted frame step (predict -> gate -> associate -> update -> spawn
 -> prune) services every client per frame — the paper's "single
-inference call" — with a fixed-capacity bank per sensor. The engine is
-deliberately synchronous-deterministic: requests are padded into the
-static measurement slots (Opt-2 discipline), so serving latency is the
-latency of one kernel launch regardless of load.
+inference call" — with a fixed-capacity bank per sensor. Under
+``TrackerConfig.fused_frame`` (the default) the measurement cycle of
+that step IS one ``katana_frame``/``katana_imm_frame`` Pallas dispatch
+(gating and greedy assignment in-kernel, only spawn/prune bookkeeping
+in XLA), so the closed-loop FPS the engine reports is the fused-kernel
+number; ``fused_frame=False`` serves the einsum oracle path instead.
+The engine is deliberately synchronous-deterministic: requests are
+padded into the static measurement slots (Opt-2 discipline), so
+serving latency is the latency of one kernel launch regardless of
+load.
 
 ``ShardedBankEngine`` scales the same step across a mesh: banks are
 data-parallel over sensors (each sensor's scene is independent), the

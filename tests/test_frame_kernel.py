@@ -1,0 +1,232 @@
+"""Fused live-frame dispatch (katana_frame / katana_imm_frame).
+
+The tentpole contract: routing ``frame_step`` / ``imm_frame_step``
+through the single Pallas dispatch (``TrackerConfig.fused_frame``, the
+default) changes NOTHING observable vs the einsum chain it replaces —
+identical association and track ids frame-by-frame across full
+spawn/coast/prune lifecycles, float32-tolerance states — and the
+in-kernel wave-scheduled greedy assignment is EXACTLY
+``tracker.greedy_assign`` (same gate, same tie-breaks, same -1
+padding) on arbitrary cost matrices, ties and invalid padding
+included.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import bank as bank_lib
+from repro.core.filters import as_imm, get_filter, make_imm
+from repro.core.tracker import (TrackerConfig, frame_step, greedy_assign,
+                                imm_frame_step)
+from repro.data.trajectories import SceneConfig, mot_scene
+from repro.kernels.katana_bank.ops import (frame_kernel_supported,
+                                           katana_greedy_assign)
+
+CFG = TrackerConfig(capacity=32, max_meas=16)
+CFG_EINSUM = dataclasses.replace(CFG, fused_frame=False)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel greedy assignment == tracker.greedy_assign, exactly.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 9), st.integers(1, 9), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_prop_kernel_greedy_matches_reference(C, M, seed):
+    """Random gated cost matrices — including exact ties (costs rounded
+    to a half-unit grid) so the first-occurrence tie-break is really
+    exercised: the wave-scheduled in-kernel assignment must equal the
+    sequential reference element-for-element."""
+    rng = np.random.default_rng(seed)
+    cost = (np.round(rng.uniform(0, 10, (C, M)) * 2) / 2).astype(np.float32)
+    valid = rng.random((C, M)) > 0.3
+    # integer gate: the gate is a trace-time constant of the dispatch,
+    # so a continuous draw would compile a fresh kernel per example
+    gate = float(rng.integers(2, 9))
+    rounds = min(C, M)
+    ref = np.asarray(greedy_assign(jnp.asarray(cost), jnp.asarray(valid),
+                                   jnp.asarray(gate), rounds))
+    got = np.asarray(katana_greedy_assign(jnp.asarray(cost),
+                                          jnp.asarray(valid), gate=gate,
+                                          rounds=rounds))
+    np.testing.assert_array_equal(got, ref)
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 5),
+       st.integers(0, 5), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_prop_kernel_greedy_invalid_padding(C, M, pad_c, pad_m, seed):
+    """Invalid-padded rows (dead slots) and columns (empty measurement
+    slots) with temptingly-cheap garbage costs change nothing: original
+    slots keep their exact reference assignment, padding stays -1 —
+    the static-shape serving contract for the in-kernel greedy."""
+    rng = np.random.default_rng(seed)
+    gate = 8.0
+    cost = rng.uniform(0, 10, (C, M)).astype(np.float32)
+    valid = rng.random((C, M)) > 0.3
+    ref = np.asarray(greedy_assign(jnp.asarray(cost), jnp.asarray(valid),
+                                   jnp.asarray(gate), min(C, M)))
+    cost_p = rng.uniform(0, 1, (C + pad_c, M + pad_m)).astype(np.float32)
+    cost_p[:C, :M] = cost
+    valid_p = np.zeros((C + pad_c, M + pad_m), bool)
+    valid_p[:C, :M] = valid
+    got = np.asarray(katana_greedy_assign(
+        jnp.asarray(cost_p), jnp.asarray(valid_p), gate=gate,
+        rounds=min(C + pad_c, M + pad_m)))
+    np.testing.assert_array_equal(got[:C], ref)
+    assert (got[C:] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# Frame-level equivalence: fused vs einsum across full lifecycles.
+# ---------------------------------------------------------------------------
+
+def _assert_frames_equal(rf, re, atol):
+    np.testing.assert_array_equal(np.asarray(rf.assoc), np.asarray(re.assoc))
+    np.testing.assert_array_equal(np.asarray(rf.unassigned),
+                                  np.asarray(re.unassigned))
+    np.testing.assert_array_equal(np.asarray(rf.confirmed),
+                                  np.asarray(re.confirmed))
+    np.testing.assert_array_equal(np.asarray(rf.bank.track_id),
+                                  np.asarray(re.bank.track_id))
+    np.testing.assert_array_equal(np.asarray(rf.bank.hits),
+                                  np.asarray(re.bank.hits))
+    np.testing.assert_allclose(np.asarray(rf.bank.x), np.asarray(re.bank.x),
+                               atol=atol)
+    np.testing.assert_allclose(np.asarray(rf.bank.P), np.asarray(re.bank.P),
+                               atol=atol)
+
+
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+def test_fused_frame_matches_einsum_lifecycle(kind):
+    """100-frame clutter + birth/death scene: spawn, coast, prune all
+    happen, and the fused dispatch stays in lockstep with the einsum
+    oracle — identical assoc and ids every frame, float32-close
+    states."""
+    model = get_filter(kind)
+    assert frame_kernel_supported(model)
+    scene = SceneConfig(T=100, max_targets=4, max_meas=16, clutter_rate=0.5,
+                        death_rate=0.02)
+    z, valid, _ = mot_scene(model, scene, seed=11)
+    step_f = jax.jit(lambda b, z, v: frame_step(model, CFG, b, z, v))
+    step_e = jax.jit(lambda b, z, v: frame_step(model, CFG_EINSUM, b, z, v))
+    bf = bank_lib.init_bank(model, CFG.capacity)
+    be = bank_lib.init_bank(model, CFG.capacity)
+    for t in range(scene.T):
+        zt, vt = jnp.asarray(z[t], jnp.float32), jnp.asarray(valid[t])
+        rf = step_f(bf, zt, vt)
+        re = step_e(be, zt, vt)
+        _assert_frames_equal(rf, re, atol=1e-4)
+        bf, be = rf.bank, re.bank
+    assert int(rf.bank.next_id) == int(re.bank.next_id)
+
+
+def test_fused_imm_frame_matches_einsum_lifecycle():
+    """The multi-model twin of the lifecycle test: the one-dispatch IMM
+    frame (mixing, weighted gate, K updates, mode posterior, combined
+    estimate in-kernel) tracks the einsum ``imm_frame_step`` across a
+    100-frame lifecycle — identical assoc/ids, close mu and combined
+    states."""
+    imm = make_imm()
+    cv9 = get_filter("cv9")
+    scene = SceneConfig(T=100, max_targets=4, max_meas=16, clutter_rate=0.5,
+                        death_rate=0.02)
+    z, valid, _ = mot_scene(cv9, scene, seed=17)
+    step_f = jax.jit(lambda b, z, v: imm_frame_step(imm, CFG, b, z, v))
+    step_e = jax.jit(lambda b, z, v: imm_frame_step(imm, CFG_EINSUM, b, z, v))
+    bf = bank_lib.init_imm_bank(imm, CFG.capacity)
+    be = bank_lib.init_imm_bank(imm, CFG.capacity)
+    for t in range(scene.T):
+        zt, vt = jnp.asarray(z[t], jnp.float32), jnp.asarray(valid[t])
+        rf = step_f(bf, zt, vt)
+        re = step_e(be, zt, vt)
+        _assert_frames_equal(rf, re, atol=5e-4)
+        np.testing.assert_allclose(np.asarray(rf.mode_probs),
+                                   np.asarray(re.mode_probs), atol=5e-4)
+        np.testing.assert_allclose(np.asarray(rf.x_est),
+                                   np.asarray(re.x_est), atol=5e-4)
+        bf, be = rf.bank, re.bank
+
+
+def test_fused_imm_k1_reduces_to_fused_frame():
+    """The degenerate K=1 IMM frame emits exactly the single-model
+    frame kernel's op stream (nonlinear EKF member included): bank
+    states match BITWISE, and mu stays exactly 1."""
+    model = get_filter("ekf")
+    imm1 = as_imm(model)
+    assert frame_kernel_supported(imm1)
+    scene = SceneConfig(T=25, max_targets=3, max_meas=16, clutter_rate=0.4,
+                        death_rate=0.0)
+    z, valid, _ = mot_scene(model, scene, seed=3)
+    step_i = jax.jit(lambda b, z, v: imm_frame_step(imm1, CFG, b, z, v))
+    step_s = jax.jit(lambda b, z, v: frame_step(model, CFG, b, z, v))
+    bi = bank_lib.init_imm_bank(imm1, CFG.capacity)
+    bs = bank_lib.init_bank(model, CFG.capacity)
+    for t in range(scene.T):
+        zt, vt = jnp.asarray(z[t], jnp.float32), jnp.asarray(valid[t])
+        ri = step_i(bi, zt, vt)
+        rs = step_s(bs, zt, vt)
+        np.testing.assert_array_equal(np.asarray(ri.assoc),
+                                      np.asarray(rs.assoc))
+        np.testing.assert_array_equal(np.asarray(ri.bank.x[0]),
+                                      np.asarray(rs.bank.x))
+        np.testing.assert_array_equal(np.asarray(ri.bank.P[0]),
+                                      np.asarray(rs.bank.P))
+        np.testing.assert_array_equal(np.asarray(ri.bank.mu),
+                                      np.ones_like(np.asarray(ri.bank.mu)))
+        bi, bs = ri.bank, rs.bank
+
+
+def test_fused_frame_falls_back_for_general_H():
+    """A non-selector measurement matrix is outside the kernel contract:
+    ``fused_frame=True`` must silently take the einsum route (and agree
+    with the explicit einsum config), not crash."""
+    model = get_filter("lkf")
+    H = np.asarray(model.H).copy()
+    H[0, 3] = 0.5  # position row also reads a velocity component
+    general = dataclasses.replace(model, H=H)
+    assert not frame_kernel_supported(general)
+    rng = np.random.default_rng(0)
+    bank = bank_lib.init_bank(general, CFG.capacity)
+    z = jnp.asarray(rng.normal(size=(CFG.max_meas, general.m)), jnp.float32)
+    v = jnp.asarray(rng.random(CFG.max_meas) < 0.5)
+    rf = frame_step(general, CFG, bank, z, v)
+    re = frame_step(general, CFG_EINSUM, bank, z, v)
+    np.testing.assert_array_equal(np.asarray(rf.assoc), np.asarray(re.assoc))
+    np.testing.assert_array_equal(np.asarray(rf.bank.x),
+                                  np.asarray(re.bank.x))
+
+
+def test_fused_frame_under_sharded_engine():
+    """The fused frame serves the multi-sensor fleet: a fused-config
+    ``ShardedBankEngine`` stays in lockstep (identical assoc/ids,
+    close states) with an einsum-config fleet over a multi-frame run,
+    sensors disagreeing about spawn/coast as they please."""
+    from repro.serving.engine import ShardedBankEngine
+
+    imm = make_imm()
+    cfg_f = TrackerConfig(capacity=16, max_meas=8)
+    cfg_e = dataclasses.replace(cfg_f, fused_frame=False)
+    S = 3
+    eng_f = ShardedBankEngine(imm, S, cfg_f)
+    eng_e = ShardedBankEngine(imm, S, cfg_e)
+    rng = np.random.default_rng(23)
+    pos = rng.normal(size=(S, 2, imm.m)) * 3
+    for t in range(12):
+        pos = pos + 0.05
+        z = np.zeros((S, cfg_f.max_meas, imm.m), np.float32)
+        v = np.zeros((S, cfg_f.max_meas), bool)
+        k = 2 if t % 5 else 1  # sensors drop a detection now and then
+        z[:, :k] = (pos + rng.normal(size=pos.shape) * 0.05)[:, :k]
+        v[:, :k] = True
+        rf, re = eng_f.frame(z, v), eng_e.frame(z, v)
+        np.testing.assert_array_equal(np.asarray(rf.assoc),
+                                      np.asarray(re.assoc))
+        np.testing.assert_array_equal(np.asarray(rf.bank.track_id),
+                                      np.asarray(re.bank.track_id))
+        np.testing.assert_allclose(np.asarray(rf.x_est),
+                                   np.asarray(re.x_est), atol=5e-4)

@@ -282,3 +282,38 @@ def test_imm_engine_snapshots_carry_mode_probs():
     # replay goes through imm_bank_sequence
     out = eng.replay(zs[:10][:, None, :])
     assert out.shape == (10, 1, imm.n)
+
+
+def test_update_imm_bank_recompute_fallback_matches_passthrough():
+    """``update_imm_bank``'s standalone path (z_pred/PHt/Sinv/S/cbar =
+    None) rebuilds the innovation quantities from the predicted bank
+    with the same expressions ``predict_imm_bank`` uses — updates must
+    come out bit-identical to the pass-through, every combination of
+    missing tensors."""
+    from repro.core import bank as bank_lib
+
+    imm = make_imm()
+    rng = np.random.default_rng(5)
+    C, M = 10, 5
+    bank = bank_lib.init_imm_bank(imm, C)
+    bank = bank._replace(
+        active=jnp.asarray(rng.random(C) < 0.7),
+        x=jnp.asarray(rng.normal(size=(imm.K, C, imm.n)) * 0.4, jnp.float32),
+        mu=jnp.asarray(rng.dirichlet(np.ones(imm.K), C), jnp.float32))
+    bank_p, z_pred, S, Sinv, PHt, cbar = bank_lib.predict_imm_bank(imm, bank)
+    z = jnp.asarray(rng.normal(size=(M, imm.m)) * 0.4, jnp.float32)
+    assoc = jnp.asarray(rng.integers(-1, M, size=C), jnp.int32)
+    ref = bank_lib.update_imm_bank(imm, bank_p, z, assoc, z_pred, PHt, Sinv,
+                                   S, cbar)
+    cases = (
+        dict(),                                              # all recomputed
+        dict(z_pred=z_pred, PHt=PHt),                        # partial
+        dict(z_pred=z_pred, PHt=PHt, Sinv=Sinv, S=S),        # only cbar
+    )
+    for kw in cases:
+        got = bank_lib.update_imm_bank(imm, bank_p, z, assoc, **kw)
+        np.testing.assert_array_equal(np.asarray(got.x), np.asarray(ref.x))
+        np.testing.assert_array_equal(np.asarray(got.P), np.asarray(ref.P))
+        np.testing.assert_array_equal(np.asarray(got.mu), np.asarray(ref.mu))
+        np.testing.assert_array_equal(np.asarray(got.hits),
+                                      np.asarray(ref.hits))

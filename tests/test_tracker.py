@@ -137,6 +137,33 @@ def test_prop_greedy_assign_invariant_to_invalid_padding(C, M, pad_c, pad_m,
     assert (got[C:] == -1).all()
 
 
+@pytest.mark.parametrize("kind", ["lkf", "ekf"])
+def test_update_bank_recompute_fallback_matches_passthrough(kind):
+    """``update_bank``'s standalone path (PHt=None / Sinv=None) must
+    rebuild exactly the innovation quantities ``predict_bank`` hands the
+    tracker — same S construction, same cofactor inverse — so a caller
+    without the precomputed tensors gets bit-identical updates."""
+    model = get_filter(kind)
+    rng = np.random.default_rng(42)
+    bank = bank_lib.init_bank(model, capacity=12)
+    bank = bank._replace(
+        active=jnp.asarray(rng.random(12) < 0.7),
+        x=jnp.asarray(rng.normal(size=(12, model.n)), jnp.float32))
+    bank_p, _, _, Sinv, PHt = bank_lib.predict_bank(model, bank)
+    z = jnp.asarray(rng.normal(size=(6, model.m)), jnp.float32)
+    assoc = jnp.asarray(rng.integers(-1, 6, size=12), jnp.int32)
+    ref = bank_lib.update_bank(model, bank_p, z, assoc, PHt, Sinv)
+    # each None independently, and both together, recompute to the same
+    got_both = bank_lib.update_bank(model, bank_p, z, assoc)
+    got_pht = bank_lib.update_bank(model, bank_p, z, assoc, None, Sinv)
+    got_sinv = bank_lib.update_bank(model, bank_p, z, assoc, PHt, None)
+    for got in (got_both, got_pht, got_sinv):
+        np.testing.assert_array_equal(np.asarray(got.x), np.asarray(ref.x))
+        np.testing.assert_array_equal(np.asarray(got.P), np.asarray(ref.P))
+        np.testing.assert_array_equal(np.asarray(got.hits),
+                                      np.asarray(ref.hits))
+
+
 def test_spawn_fills_free_slots_deterministically():
     model = get_filter("lkf")
     bank = bank_lib.init_bank(model, capacity=4)
@@ -249,9 +276,11 @@ def test_frame_step_single_S_regression(kind):
     """The single-S refactor (compute S / S^{-1} / P·Hᵀ once in
     predict_bank, reuse in gating + update) changes NOTHING numerically:
     frame-by-frame outputs match the legacy recompute-everything step
-    over a full scene."""
+    over a full scene. Pinned to the EINSUM route — this is the oracle
+    path's regression test; the fused kernel's own equivalence lives in
+    tests/test_frame_kernel.py."""
     model = get_filter(kind)
-    cfg = TrackerConfig(capacity=16, max_meas=8)
+    cfg = TrackerConfig(capacity=16, max_meas=8, fused_frame=False)
     scene = SceneConfig(T=30, max_targets=3, max_meas=8, clutter_rate=0.5,
                         death_rate=0.0)
     z, valid, _ = mot_scene(model, scene, seed=13)
@@ -289,7 +318,9 @@ def test_frame_step_inverts_S_exactly_once(monkeypatch):
 
     monkeypatch.setattr(bank_lib, "small_inv", counting)
     model = get_filter("lkf")
-    cfg = TrackerConfig(capacity=8, max_meas=4)
+    # einsum route: the fused kernel emits its (single) inversion inside
+    # the Pallas body, invisible to this trace-level counter
+    cfg = TrackerConfig(capacity=8, max_meas=4, fused_frame=False)
     bank = bank_lib.init_bank(model, cfg.capacity)
     z = jnp.asarray(np.random.default_rng(0).normal(size=(4, model.m)),
                     jnp.float32)
