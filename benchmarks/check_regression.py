@@ -1,0 +1,171 @@
+"""Bench-regression gate: committed RATIO baselines, not wall-clock.
+
+Absolute throughput on a shared CI runner is noise — a different
+machine, a noisy neighbor, a different core count all move it. What is
+stable is the repo's own headline RATIOS: fused-scan vs per-frame loop,
+fused frame vs einsum chain, fused IMM scan vs per-frame IMM driver.
+A real regression (a kernel edit that quietly de-fuses a loop, a
+wrapper that re-pays packing per frame) moves those ratios on ANY
+machine, so that is what this gate pins.
+
+    PYTHONPATH=src python -m benchmarks.check_regression            # gate
+    PYTHONPATH=src python -m benchmarks.check_regression --update   # re-pin
+
+Reads the BENCH_scan/imm/frame.json the bench run just wrote, extracts
+the ratios keyed ``backend/mode`` + shape (an interpret-mode baseline
+never judges a compiled run — the mode stamp keys the comparison, same
+honesty rule as everywhere else in this PR), and compares against the
+committed ``benchmarks/baseline_ratios.json``:
+
+  * current < baseline x (1 - tol)  ->  FAIL (default tol 0.25: a >25%
+    relative throughput regression on any pinned ratio).
+  * a pinned key missing from the current run -> FAIL (a silently
+    dropped bench row must not pass the gate).
+  * keys the baseline doesn't pin are reported, not judged (new rows
+    appear on --update).
+
+The bench-smoke CI job runs this right after ``benchmarks.run --smoke``;
+the committed baseline is generated from the same smoke shapes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, Optional
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BASELINE_PATH = pathlib.Path(__file__).with_name("baseline_ratios.json")
+DEFAULT_TOL = 0.25
+
+
+def _load(root: pathlib.Path, name: str) -> Optional[Dict]:
+    path = root / name
+    if not path.exists():
+        return None
+    return json.loads(path.read_text())
+
+
+def _prefix(doc: Dict) -> str:
+    meta = doc.get("meta", {})
+    return f"{meta.get('backend', '?')}/{meta.get('mode', '?')}"
+
+
+def collect(root: Optional[pathlib.Path] = None) -> Dict[str, float]:
+    """Ratio dict from the BENCH json files under ``root`` (repo root
+    by default). Files that don't exist contribute nothing — the
+    baseline then fails on the missing keys, which is the point."""
+    root = root or ROOT
+    out: Dict[str, float] = {}
+
+    scan = _load(root, "BENCH_scan.json")
+    if scan:
+        p = _prefix(scan)
+        for r in scan["rows"]:
+            out[f"{p}/scan_fusion/{r['kind']}/N={r['N']}/fused_vs_loop"] = \
+                r["speedup_fused_vs_loop"]
+
+    imm = _load(root, "BENCH_imm.json")
+    if imm:
+        p = _prefix(imm)
+        N = imm["N"]
+        for key, field in (
+                ("kernel_imm_vs_cv9", "ratio_kernel_imm_vs_cv9"),
+                ("imm_scan_vs_per_frame", "speedup_imm_scan_vs_per_frame"),
+                ("imm_scan_vs_ref", "ratio_imm_scan_vs_ref")):
+            if field in imm:
+                out[f"{p}/imm/N={N}/{key}"] = imm[field]
+
+    frame = _load(root, "BENCH_frame.json")
+    if frame:
+        p = _prefix(frame)
+        for r in frame["rows"]:
+            out[f"{p}/frame/{r['kind']}/C={r['C']}/fused_vs_einsum"] = \
+                r["speedup_fused_vs_einsum"]
+        for r in frame.get("sharded", []):
+            if not r.get("skipped"):
+                out[f"{p}/frame/sharded/devices={r['devices']}"
+                    f"/S={r['S']}/fused_vs_einsum"] = \
+                    r["speedup_fused_vs_einsum"]
+    return out
+
+
+def check(baseline: Dict[str, float], current: Dict[str, float],
+          tol: float = DEFAULT_TOL):
+    """-> (failures, notes): failures non-empty means the gate is red."""
+    failures, notes = [], []
+    for key, base in sorted(baseline.items()):
+        cur = current.get(key)
+        if cur is None:
+            failures.append(f"MISSING  {key}: pinned at {base:.3f} but "
+                            f"absent from this run — a dropped bench row "
+                            f"(or stale baseline: --update after an "
+                            f"intentional shape change)")
+            continue
+        floor = base * (1.0 - tol)
+        if cur < floor:
+            failures.append(
+                f"REGRESSED {key}: {cur:.3f} < {floor:.3f} "
+                f"(baseline {base:.3f}, tol {tol:.0%})")
+        elif cur > base * (1.0 + tol):
+            notes.append(f"improved {key}: {cur:.3f} vs baseline "
+                         f"{base:.3f} — consider --update to re-pin")
+        else:
+            notes.append(f"ok       {key}: {cur:.3f} "
+                         f"(baseline {base:.3f})")
+    for key in sorted(set(current) - set(baseline)):
+        notes.append(f"unpinned {key}: {current[key]:.3f} "
+                     f"(--update to pin)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(BASELINE_PATH))
+    ap.add_argument("--root", default=str(ROOT),
+                    help="directory holding the BENCH_*.json files")
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL)
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin the baseline from the current run")
+    args = ap.parse_args(argv)
+    baseline_path = pathlib.Path(args.baseline)
+
+    current = collect(pathlib.Path(args.root))
+    if not current:
+        print("no BENCH_*.json found — run `python -m benchmarks.run "
+              "--only scan_fusion,imm,frame` first", file=sys.stderr)
+        return 2
+
+    if args.update:
+        baseline_path.write_text(json.dumps(dict(
+            note=("throughput-ratio floors for benchmarks/"
+                  "check_regression.py; keys are backend/mode + shape, "
+                  "regenerate with --update from the same shapes CI "
+                  "runs (benchmarks.run --smoke)"),
+            tol=args.tol, ratios=current), indent=2, sort_keys=True) + "\n")
+        print(f"pinned {len(current)} ratios -> {baseline_path}")
+        return 0
+
+    if not baseline_path.exists():
+        print(f"no baseline at {baseline_path} — run with --update to "
+              f"create it", file=sys.stderr)
+        return 2
+    doc = json.loads(baseline_path.read_text())
+    failures, notes = check(doc["ratios"], current,
+                            args.tol if args.tol != DEFAULT_TOL
+                            else doc.get("tol", DEFAULT_TOL))
+    for line in notes:
+        print(line)
+    if failures:
+        print(f"\n{len(failures)} bench regression(s):", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"\nbench-regression gate green "
+          f"({len(doc['ratios'])} pinned ratios)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

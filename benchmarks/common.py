@@ -1,4 +1,5 @@
-"""Shared benchmark utilities: timing + HLO inspection."""
+"""Shared benchmark utilities: timing + HLO inspection + execution-mode
+stamping (every BENCH row records how its code actually executed)."""
 from __future__ import annotations
 
 import time
@@ -6,6 +7,33 @@ from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
+
+from repro.execmode import active_mode
+
+
+def bench_meta() -> Dict:
+    """Top-level BENCH_*.json metadata: the resolved execution mode
+    (requested + actual), backend and jax version — so interpret-mode
+    dispatch-count wins can never be conflated with compiled-mode
+    wall-clock wins after the fact."""
+    return active_mode().as_meta()
+
+
+def row_mode(pallas: bool = True) -> Dict:
+    """Per-row stamp: ``mode`` is "compiled" only for code that really
+    compiled for this backend — XLA-native (einsum/lanes) formulations
+    always, Pallas kernel dispatches only when the backend lowered them
+    natively. ``lowering`` names the path ("xla" / "pallas" /
+    "pallas-interpret"); ``backend`` the jax backend."""
+    m = active_mode()
+    return dict(mode=m.row_mode(pallas), lowering=m.lowering(pallas),
+                backend=m.backend)
+
+
+def row_tag(pallas: bool = True) -> str:
+    """CSV-suffix form of ``row_mode`` for the harness's derived column."""
+    r = row_mode(pallas)
+    return f"mode={r['mode']};lowering={r['lowering']}"
 
 
 def time_fn(fn: Callable, *args, iters: int = 50, warmup: int = 5,
@@ -38,8 +66,16 @@ def hlo_op_counts(fn: Callable, *args, ops=("transpose", "reshape",
     return op_census(compiled_of(fn, *args).as_text(), ops)
 
 
-def hlo_flops(fn: Callable, *args) -> float:
+def hlo_cost(fn: Callable, *args) -> Dict[str, float]:
+    """XLA ``cost_analysis()`` of the compiled program: at least
+    ``flops`` and ``bytes`` (the ``bytes accessed`` counter), 0.0 when
+    the backend doesn't report a counter."""
     ca = compiled_of(fn, *args).cost_analysis()
     if isinstance(ca, (list, tuple)):  # jax<=0.4 returns [dict] per device
         ca = ca[0] if ca else {}
-    return float(ca.get("flops", 0.0))
+    return dict(flops=float(ca.get("flops", 0.0)),
+                bytes=float(ca.get("bytes accessed", 0.0)))
+
+
+def hlo_flops(fn: Callable, *args) -> float:
+    return hlo_cost(fn, *args)["flops"]

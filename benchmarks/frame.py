@@ -25,8 +25,12 @@ explicit ``skipped=`` rows, never silence).
 Every timed configuration first asserts fused/einsum equivalence on
 the timed frame (identical assoc, float32-tolerance states) — the CI
 smoke run keeps that assertion at tiny shapes, where the timings
-themselves are meaningless. Results land in BENCH_frame.json.
-Interpret-mode numbers overweight dispatch/op overhead vs TPU silicon;
+themselves are meaningless. Results land in BENCH_frame.json, every
+row stamped with how it actually executed (mode / lowering / backend):
+the ``einsum`` route is real compiled XLA on every backend, while the
+``fused`` route's Pallas dispatch is interpret-stamped on CPU — those
+numbers overweight dispatch/op overhead vs TPU silicon. Never read a
+fused-vs-einsum speedup without reading the stamps first;
 docs/benchmarks.md maps these FPS to the paper's reporting.
 """
 from __future__ import annotations
@@ -40,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_fn
+from benchmarks.common import bench_meta, row_mode, row_tag, time_fn
 from repro.core import bank as bank_lib
 from repro.core.filters import get_filter, make_imm
 from repro.core.tracker import TrackerConfig, frame_step, imm_frame_step
@@ -101,9 +105,11 @@ def _bench_single(csv: List[str], rows: list, kind: str, model, C: int,
         # because the frame's sequential assignment loop is the most
         # stall-sensitive thing in the repo)
         sec = min(time_fn(fn, iters=5, warmup=1) for _ in range(5))
-        row[name] = dict(us_per_frame=sec * 1e6, steps_per_sec=1.0 / sec)
+        pallas = name == "fused"  # einsum route is XLA on every backend
+        row[name] = dict(us_per_frame=sec * 1e6, steps_per_sec=1.0 / sec,
+                         **row_mode(pallas))
         csv.append(f"frame/{kind}/{name}/C={C},{sec * 1e6:.1f},"
-                   f"steps_per_sec={1.0 / sec:.1f}")
+                   f"steps_per_sec={1.0 / sec:.1f};{row_tag(pallas)}")
     row["speedup_fused_vs_einsum"] = (row["fused"]["steps_per_sec"]
                                       / row["einsum"]["steps_per_sec"])
     csv.append(f"frame/{kind}/speedup_fused_vs_einsum/C={C},0,"
@@ -150,9 +156,11 @@ def _bench_sharded(csv: List[str], out: list, S: int, T: int) -> None:
             for t in range(1, T):
                 res.append(eng.frame(z[t], v[t]))
             fps = eng.stats.fps
-            row[name] = dict(frames_per_sec=fps)
+            pallas = name == "fused"
+            row[name] = dict(frames_per_sec=fps, **row_mode(pallas))
             csv.append(f"frame/sharded/{name}/devices={d}/S={S},"
-                       f"{1e6 / fps:.1f},frames_per_sec={fps:.1f}")
+                       f"{1e6 / fps:.1f},frames_per_sec={fps:.1f};"
+                       f"{row_tag(pallas)}")
         # the same equivalence gate as the single-sensor rows, under the
         # mesh: identical association + ids, close combined states,
         # every frame (comparisons happen outside eng.frame, so the
@@ -182,7 +190,7 @@ def run(csv: List[str], Cs=(64, 256, 1024), M: int = 64,
     headline = next((r["speedup_fused_vs_einsum"] for r in rows
                      if r["kind"] == "lkf" and r["C"] == 256), None)
     BENCH_JSON.write_text(json.dumps(dict(
-        bench="frame", mode="interpret", M=M,
+        bench="frame", meta=bench_meta(), M=M,
         rows=rows, sharded=sharded,
         speedup_lkf_c256=headline,
         notes=("fused = one katana_frame/katana_imm_frame Pallas "
@@ -192,7 +200,9 @@ def run(csv: List[str], Cs=(64, 256, 1024), M: int = 64,
                "chain (equivalence oracle). Every row asserts identical "
                "assoc + float32-tolerance states before timing. "
                "sharded rows: 8-sensor IMM ShardedBankEngine fleet "
-               "frames/sec. Interpret-mode CPU numbers overweight "
-               "per-op dispatch overhead vs TPU silicon; see "
+               "frames/sec. Read each row's mode/lowering stamp: "
+               "einsum rows are compiled XLA everywhere, fused rows "
+               "are interpret-stamped on CPU (overweighting per-op "
+               "dispatch overhead vs TPU silicon); see "
                "docs/benchmarks.md for the paper-FPS mapping."),
     ), indent=2) + "\n")

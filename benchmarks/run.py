@@ -22,6 +22,9 @@ ALL = ("accuracy", "fig4", "batching", "table1", "roofline", "scan_fusion",
        "imm", "frame")
 
 SMOKE_KWARGS = {
+    # roofline: the census/cost_analysis wiring is the point; tiny
+    # shapes keep the compiles cheap while still emitting every row
+    "roofline": dict(Ns=(8,), T=8, C=16, M=8),
     "scan_fusion": dict(Ns=(8,), T=8),
     "imm": dict(N=4, T=8),
     # keeps the HLO-census rows small AND drives the sharded-IMM serving

@@ -16,9 +16,12 @@ throughput (steps/sec), plus the fused-vs-step_loop speedup. Results
 also land in BENCH_scan.json at the repo root so the perf trajectory of
 the core workload is tracked from this PR onward.
 
-Interpret-mode numbers (this container is CPU-only) measure dispatch +
-interpreter overhead, not TPU silicon — but that is exactly the axis
-this rewrite removes: one dispatch per sequence vs one per frame.
+Every row is stamped with how it actually executed (mode / lowering /
+backend, see benchmarks/common.row_mode): on a CPU container the Pallas
+rows are interpret-mode — dispatch + interpreter overhead, not TPU
+silicon, which is exactly the axis the fused rewrite removes — while
+``lanes_scan`` is real compiled XLA on every backend. Never compare an
+interpret row against a compiled row without reading the stamp.
 """
 from __future__ import annotations
 
@@ -30,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_fn
+from benchmarks.common import bench_meta, row_mode, row_tag, time_fn
 from repro.core.filters import get_filter
 from repro.core.rewrites import build_stage
 from repro.kernels.katana_bank.ops import katana_bank, katana_bank_sequence
@@ -73,16 +76,21 @@ def run(csv: List[str], Ns=(64, 256, 1024), T: int = 32) -> None:
                 return xs
 
             timings = {}
-            for name, fn in (("step_loop", step_loop), ("fused_scan", fused),
-                             ("lanes_scan", lanes_scan)):
+            # step_loop/fused_scan dispatch Pallas kernels; lanes_scan is
+            # XLA-native — their per-row mode stamps differ on CPU
+            for name, fn, pallas in (("step_loop", step_loop, True),
+                                     ("fused_scan", fused, True),
+                                     ("lanes_scan", lanes_scan, False)):
                 sec = time_fn(fn, iters=3, warmup=1)
                 per_frame_us = sec / T * 1e6
                 steps_per_sec = T / sec
                 timings[name] = dict(us_per_frame=per_frame_us,
-                                     steps_per_sec=steps_per_sec)
+                                     steps_per_sec=steps_per_sec,
+                                     **row_mode(pallas))
                 csv.append(f"scan_fusion/{kind}/{name}/N={N},"
                            f"{per_frame_us:.1f},"
-                           f"steps_per_sec={steps_per_sec:.1f}")
+                           f"steps_per_sec={steps_per_sec:.1f};"
+                           f"{row_tag(pallas)}")
             speedup = (timings["fused_scan"]["steps_per_sec"]
                        / timings["step_loop"]["steps_per_sec"])
             csv.append(f"scan_fusion/{kind}/speedup_fused_vs_loop/N={N},0,"
@@ -90,5 +98,5 @@ def run(csv: List[str], Ns=(64, 256, 1024), T: int = 32) -> None:
             rows.append(dict(kind=kind, N=N, T=T, speedup_fused_vs_loop=speedup,
                              **{k: v for k, v in timings.items()}))
     BENCH_JSON.write_text(json.dumps(
-        dict(bench="scan_fusion", mode="interpret", T=T, rows=rows),
+        dict(bench="scan_fusion", meta=bench_meta(), T=T, rows=rows),
         indent=2) + "\n")

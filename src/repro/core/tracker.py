@@ -55,6 +55,18 @@ class TrackerConfig:
     # equivalence oracle (and the automatic fallback for models the
     # kernel can't serve: non-selector H, nonlinear IMM members).
     fused_frame: bool = True
+    # Execution mode for the kernel dispatches: None defers to the
+    # KATANA_MODE env var ("auto"/"interpret"/"compiled"); an explicit
+    # value here pins this tracker. A "compiled" request on a backend
+    # that can't lower Pallas falls back to the interpreter loudly
+    # (repro.execmode.ExecModeFallbackWarning) — never silently.
+    mode: Optional[str] = None
+
+    def exec_mode(self):
+        """The resolved ``repro.execmode.ExecMode`` for this tracker."""
+        from repro.execmode import resolve_mode
+
+        return resolve_mode(self.mode)
 
 
 class FrameResult(NamedTuple):
@@ -134,7 +146,8 @@ def frame_step(model: FilterModel, cfg: TrackerConfig, bank: BankState,
 
         x2, P2, assoc = katana_frame(model, bank.x, bank.P, zt, z_valid,
                                      bank.active, gate=float(gate),
-                                     rounds=rounds)
+                                     rounds=rounds,
+                                     interpret=cfg.exec_mode().interpret)
         hits, misses, age = bank_lib.lifecycle_counters(bank, assoc)
         bank_u = bank._replace(x=x2, P=P2, hits=hits, misses=misses,
                                age=age)
@@ -187,7 +200,8 @@ def imm_frame_step(imm: IMMModel, cfg: TrackerConfig, bank: IMMBankState,
 
         x2, P2, mu2, x_c, assoc = katana_imm_frame(
             imm, bank.x, bank.P, bank.mu, zt, z_valid, bank.active,
-            gate=float(gate), rounds=rounds)
+            gate=float(gate), rounds=rounds,
+            interpret=cfg.exec_mode().interpret)
         hits, misses, age = bank_lib.lifecycle_counters(bank, assoc)
         bank_u = bank._replace(x=x2, P=P2, mu=mu2, hits=hits,
                                misses=misses, age=age)

@@ -35,12 +35,23 @@ Dispatch granularities:
   ``katana_greedy_assign`` the in-kernel assignment standalone, for
         equivalence testing against ``tracker.greedy_assign``.
 
-``interpret=True`` everywhere in this container (CPU); on a real TPU
-pass interpret=False — the kernels and BlockSpecs are TPU-shaped.
+Execution mode: every op's ``interpret`` parameter defaults to ``None``
+= "resolve from the active execution mode" (``repro.execmode``: the
+``KATANA_MODE`` env var / ``TrackerConfig.mode``, with a capability
+probe so a ``compiled`` request on a backend that can't lower Pallas —
+CPU included — falls back to the interpreter LOUDLY, never silently).
+Pass ``interpret=True``/``False`` to pin a path explicitly (the kernel
+equivalence tests do). Likewise ``lane_tile``/``time_chunk`` default to
+0 = "consult the autotuned table" (``autotune.tuned.json``, keyed on
+kernel x bank size x backend x mode), falling back to the static
+defaults when no measurement matches. The raw ``kernel.py`` step
+functions below this layer stay mode-unaware (explicit ``interpret``
+only); ops is where policy is resolved.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +59,9 @@ import numpy as np
 
 from repro.core.filters import FilterModel, IMMModel
 from repro.core.rewrites import imm_combine, imm_mix, imm_mode_posterior
+from repro.execmode import resolve_interpret
+from repro.kernels.katana_bank.autotune import (tuned_lane_tile,
+                                               tuned_time_chunk)
 from repro.kernels.katana_bank.kernel import (
     LANE_TILE,
     _selector_rows,
@@ -76,15 +90,27 @@ def _pad_to(x, N_pad, axis=-1):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("model", "lane_tile", "symmetrize",
-                                    "interpret"))
-def katana_bank(model: FilterModel, x, P, z, lane_tile: int = LANE_TILE,
-                symmetrize: bool = True, interpret: bool = True):
+def katana_bank(model: FilterModel, x, P, z, lane_tile: int = 0,
+                symmetrize: bool = True,
+                interpret: Optional[bool] = None):
     """Fused batched KF step.
 
     x: (N, n); P: (N, n, n); z: (N, m)  ->  (x', P') same shapes.
+    ``lane_tile=0`` consults the autotuned table; ``interpret=None``
+    resolves from the active execution mode.
     """
+    interpret = resolve_interpret(interpret)
+    lane_tile = lane_tile or tuned_lane_tile("katana_bank", x.shape[0],
+                                             LANE_TILE)
+    return _katana_bank(model, x, P, z, lane_tile=lane_tile,
+                        symmetrize=symmetrize, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "lane_tile", "symmetrize",
+                                    "interpret"))
+def _katana_bank(model: FilterModel, x, P, z, lane_tile: int,
+                 symmetrize: bool, interpret: bool):
     N = x.shape[0]
     N_pad = -(-N // lane_tile) * lane_tile
     # AoS -> SoA (lanes-minor): one transpose outside the kernel; inside,
@@ -97,15 +123,12 @@ def katana_bank(model: FilterModel, x, P, z, lane_tile: int = LANE_TILE,
     return x2[:, :N].T, P2[:, :, :N].transpose(2, 0, 1)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("model", "lane_tile", "symmetrize",
-                                    "interpret", "return_final",
-                                    "time_chunk"))
 def katana_bank_sequence(model: FilterModel, zs, x0, P0,
-                         lane_tile: int = LANE_TILE,
-                         symmetrize: bool = True, interpret: bool = True,
+                         lane_tile: int = 0,
+                         symmetrize: bool = True,
+                         interpret: Optional[bool] = None,
                          return_final: bool = False,
-                         time_chunk: int = 4096):
+                         time_chunk: int = 0):
     """Fused multi-frame filter: one kernel dispatch per sequence.
 
     zs: (T, N, m); x0: (N, n); P0: (N, n, n)  ->  xs (T, N, n), the
@@ -119,7 +142,29 @@ def katana_bank_sequence(model: FilterModel, zs, x0, P0,
     in VMEM, so streams longer than ``time_chunk`` frames run as
     ceil(T / time_chunk) dispatches with (x, P) carried between them —
     the bank still only round-trips HBM once per CHUNK, not per frame.
+    ``lane_tile=0`` / ``time_chunk=0`` consult the autotuned table
+    (static fallbacks LANE_TILE / 4096); ``interpret=None`` resolves
+    from the active execution mode.
     """
+    N = jnp.shape(zs)[1]
+    interpret = resolve_interpret(interpret)
+    lane_tile = lane_tile or tuned_lane_tile("katana_bank_sequence", N,
+                                             LANE_TILE)
+    time_chunk = time_chunk or tuned_time_chunk("katana_bank_sequence", N,
+                                                4096)
+    return _katana_bank_sequence(model, zs, x0, P0, lane_tile=lane_tile,
+                                 symmetrize=symmetrize, interpret=interpret,
+                                 return_final=return_final,
+                                 time_chunk=time_chunk)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "lane_tile", "symmetrize",
+                                    "interpret", "return_final",
+                                    "time_chunk"))
+def _katana_bank_sequence(model: FilterModel, zs, x0, P0, lane_tile: int,
+                          symmetrize: bool, interpret: bool,
+                          return_final: bool, time_chunk: int):
     zs = jnp.asarray(zs)
     T, N, m = zs.shape
     N_pad = -(-N // lane_tile) * lane_tile
@@ -142,6 +187,7 @@ def katana_bank_sequence(model: FilterModel, zs, x0, P0,
 def katana_bank_soa(model: FilterModel, x, P, z, **kw):
     """SoA entry point for callers that keep the lane layout end-to-end
     (the serving engine's resident bank)."""
+    kw.setdefault("interpret", resolve_interpret(None))
     return katana_bank_step(model, x, P, z, **kw)
 
 
@@ -159,12 +205,9 @@ def frame_kernel_supported(model) -> bool:
     return _selector_rows(np.asarray(model.H)) is not None
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("model", "gate", "rounds", "symmetrize",
-                                    "interpret"))
 def katana_frame(model: FilterModel, x, P, z, z_valid, active, gate: float,
                  rounds: int, symmetrize: bool = True,
-                 interpret: bool = True):
+                 interpret: Optional[bool] = None):
     """Fused live tracking frame: the whole measurement cycle of
     ``tracker.frame_step`` — predict, gate, greedy assignment, update —
     as ONE kernel dispatch.
@@ -179,6 +222,16 @@ def katana_frame(model: FilterModel, x, P, z, z_valid, active, gate: float,
     caller. Padding lanes ride along inactive (their zero P predicts to
     P̂ = Q, so S = Q[obs][obs] + R stays invertible) and are sliced
     off."""
+    return _katana_frame(model, x, P, z, z_valid, active, gate=gate,
+                         rounds=rounds, symmetrize=symmetrize,
+                         interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "gate", "rounds", "symmetrize",
+                                    "interpret"))
+def _katana_frame(model: FilterModel, x, P, z, z_valid, active, gate: float,
+                  rounds: int, symmetrize: bool, interpret: bool):
     C = x.shape[0]
     C_pad = -(-C // FRAME_LANE_PAD) * FRAME_LANE_PAD
     xs = _pad_to(x.T, C_pad)
@@ -193,12 +246,9 @@ def katana_frame(model: FilterModel, x, P, z, z_valid, active, gate: float,
     return (x2[:, :C].T, P2[:, :, :C].transpose(2, 0, 1), assoc[0, :C])
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("imm", "gate", "rounds", "symmetrize",
-                                    "interpret"))
 def katana_imm_frame(imm: IMMModel, x, P, mu, z, z_valid, active,
                      gate: float, rounds: int, symmetrize: bool = True,
-                     interpret: bool = True):
+                     interpret: Optional[bool] = None):
     """Fused live IMM tracking frame (the multi-model ``katana_frame``):
     mixing, K model-conditioned predicts, the cbar-weighted gate, greedy
     assignment, K updates + log-likelihoods, mode posterior and the
@@ -212,6 +262,17 @@ def katana_imm_frame(imm: IMMModel, x, P, mu, z, z_valid, active,
     prune stay with the caller (``tracker.imm_frame_step``). Padding
     lanes get a uniform mode distribution so their (discarded)
     posterior algebra stays finite."""
+    return _katana_imm_frame(imm, x, P, mu, z, z_valid, active, gate=gate,
+                             rounds=rounds, symmetrize=symmetrize,
+                             interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("imm", "gate", "rounds", "symmetrize",
+                                    "interpret"))
+def _katana_imm_frame(imm: IMMModel, x, P, mu, z, z_valid, active,
+                      gate: float, rounds: int, symmetrize: bool,
+                      interpret: bool):
     K, C, n = x.shape
     C_pad = -(-C // FRAME_LANE_PAD) * FRAME_LANE_PAD
     xs = _pad_to(x.transpose(0, 2, 1), C_pad)          # (K, n, C_pad)
@@ -229,13 +290,19 @@ def katana_imm_frame(imm: IMMModel, x, P, mu, z, z_valid, active,
             mu2[:, :C].T, xc[:, :C].T, assoc[0, :C])
 
 
-@functools.partial(jax.jit, static_argnames=("gate", "rounds", "interpret"))
 def katana_greedy_assign(cost, valid, gate: float, rounds: int,
-                         interpret: bool = True):
+                         interpret: Optional[bool] = None):
     """The frame kernels' in-kernel greedy assignment as a standalone
     dispatch, canonical (C, M) layout — the direct test surface for
     equivalence with ``tracker.greedy_assign``. cost: (C, M);
     valid: (C, M) bool. Returns assoc (C,) int32."""
+    return _katana_greedy_assign(cost, valid, gate=gate, rounds=rounds,
+                                 interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("gate", "rounds", "interpret"))
+def _katana_greedy_assign(cost, valid, gate: float, rounds: int,
+                          interpret: bool):
     C, M = cost.shape
     assoc = greedy_assign_step(cost.T, valid.astype(cost.dtype).T,
                                gate=gate, rounds=rounds,
@@ -261,11 +328,9 @@ def _imm_lane_table(imm: IMMModel, N: int, L_pad: int,
     return (V @ sel).astype(dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("imm", "lane_tile", "symmetrize",
-                                    "interpret"))
-def katana_bank_imm(imm: IMMModel, x, P, z, lane_tile: int = LANE_TILE,
-                    symmetrize: bool = True, interpret: bool = True):
+def katana_bank_imm(imm: IMMModel, x, P, z, lane_tile: int = 0,
+                    symmetrize: bool = True,
+                    interpret: Optional[bool] = None):
     """Fused multi-model (IMM) KF step + measurement log-likelihoods.
 
     x: (K, N, n) model-conditioned means (typically the IMM-mixed
@@ -278,6 +343,18 @@ def katana_bank_imm(imm: IMMModel, x, P, z, lane_tile: int = LANE_TILE,
     kernel dispatch, exactly like K·N plain filters (paper §IV-D's
     batching argument applied to the model index).
     """
+    interpret = resolve_interpret(interpret)
+    lane_tile = lane_tile or tuned_lane_tile(
+        "katana_bank_imm", x.shape[0] * x.shape[1], LANE_TILE)
+    return _katana_bank_imm(imm, x, P, z, lane_tile=lane_tile,
+                            symmetrize=symmetrize, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("imm", "lane_tile", "symmetrize",
+                                    "interpret"))
+def _katana_bank_imm(imm: IMMModel, x, P, z, lane_tile: int,
+                     symmetrize: bool, interpret: bool):
     K, N, n = x.shape
     m = z.shape[-1]
     L = K * N
@@ -295,14 +372,11 @@ def katana_bank_imm(imm: IMMModel, x, P, z, lane_tile: int = LANE_TILE,
             ll[0, :L].reshape(K, N))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("imm", "lane_tile", "symmetrize",
-                                    "interpret", "return_final",
-                                    "time_chunk"))
 def katana_imm_sequence(imm: IMMModel, zs, x0, P0, mu0=None, valid=None,
                         lane_tile: int = 0, symmetrize: bool = True,
-                        interpret: bool = True, return_final: bool = False,
-                        time_chunk: int = 64):
+                        interpret: Optional[bool] = None,
+                        return_final: bool = False,
+                        time_chunk: int = 0):
     """Fused IMM filtering of a (T, N, m) measurement stream: ONE kernel
     dispatch per time chunk (the ``imm_scan`` stage fast path).
 
@@ -318,12 +392,13 @@ def katana_imm_sequence(imm: IMMModel, zs, x0, P0, mu0=None, valid=None,
 
     ``lane_tile`` here counts TRACKS per program (each program holds all
     K model slabs of its tracks, K·lane_tile lanes); the default 0
-    resolves to LANE_TILE // K so every program keeps the same lane
-    footprint as the single-model kernels regardless of K. The default
-    ``time_chunk`` is deliberately smaller than the single-model
-    sequence's: the IMM scan carries K· the block bytes per frame, and
-    bounded chunks also keep the backend's in-loop output-block updates
-    from degrading on long streams.
+    first consults the autotuned table, then falls back to LANE_TILE//K
+    so every program keeps the same lane footprint as the single-model
+    kernels regardless of K. The ``time_chunk`` fallback (64) is
+    deliberately smaller than the single-model sequence's: the IMM scan
+    carries K· the block bytes per frame, and bounded chunks also keep
+    the backend's in-loop output-block updates from degrading on long
+    streams.
 
     Unlike ``imm_bank_sequence`` (one katana_bank_imm dispatch plus XLA
     mixing per frame), the mixing and mode-posterior algebra run INSIDE
@@ -332,14 +407,33 @@ def katana_imm_sequence(imm: IMMModel, zs, x0, P0, mu0=None, valid=None,
     a whole chunk, and the lane padding + AoS->SoA transposes are paid
     once per sequence. K=1 reduces exactly to ``katana_bank_sequence``.
     """
-    zs = jnp.asarray(zs)
-    T, N, m = zs.shape
-    K, n = imm.K, imm.n
+    N = jnp.shape(zs)[1]
+    interpret = resolve_interpret(interpret)
+    if not lane_tile:
+        lane_tile = tuned_lane_tile("katana_imm_sequence", N, 0)
     if not lane_tile:
         # largest power of two <= LANE_TILE / K: keeps the BlockSpec
         # minor dim lane-register-friendly even when K doesn't divide
         # the lane tile (K=3 would otherwise give an 85-wide block)
-        lane_tile = 1 << max(3, (LANE_TILE // K).bit_length() - 1)
+        lane_tile = 1 << max(3, (LANE_TILE // imm.K).bit_length() - 1)
+    time_chunk = time_chunk or tuned_time_chunk("katana_imm_sequence", N, 64)
+    return _katana_imm_sequence(imm, zs, x0, P0, mu0, valid,
+                                lane_tile=lane_tile, symmetrize=symmetrize,
+                                interpret=interpret,
+                                return_final=return_final,
+                                time_chunk=time_chunk)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("imm", "lane_tile", "symmetrize",
+                                    "interpret", "return_final",
+                                    "time_chunk"))
+def _katana_imm_sequence(imm: IMMModel, zs, x0, P0, mu0, valid,
+                         lane_tile: int, symmetrize: bool, interpret: bool,
+                         return_final: bool, time_chunk: int):
+    zs = jnp.asarray(zs)
+    T, N, m = zs.shape
+    K, n = imm.K, imm.n
     x0 = jnp.asarray(x0)
     P0 = jnp.asarray(P0)
     if x0.ndim == 2:
@@ -381,12 +475,10 @@ def katana_imm_sequence(imm: IMMModel, zs, x0, P0, mu0=None, valid=None,
     return out
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("imm", "lane_tile", "symmetrize",
-                                    "interpret", "return_final"))
 def imm_bank_sequence(imm: IMMModel, zs, x0, P0, mu0=None,
-                      lane_tile: int = LANE_TILE, symmetrize: bool = True,
-                      interpret: bool = True, return_final: bool = False):
+                      lane_tile: int = 0, symmetrize: bool = True,
+                      interpret: Optional[bool] = None,
+                      return_final: bool = False):
     """IMM-filter a (T, N, m) measurement stream: one jitted lax.scan,
     one fused multi-model kernel dispatch per frame.
 
@@ -403,6 +495,20 @@ def imm_bank_sequence(imm: IMMModel, zs, x0, P0, mu0=None,
     every frame — ``katana_imm_sequence`` is the fused fast path; this
     driver remains as its independently-built equivalence oracle.
     """
+    interpret = resolve_interpret(interpret)
+    lane_tile = lane_tile or tuned_lane_tile(
+        "imm_bank_sequence", imm.K * jnp.shape(zs)[1], LANE_TILE)
+    return _imm_bank_sequence(imm, zs, x0, P0, mu0, lane_tile=lane_tile,
+                              symmetrize=symmetrize, interpret=interpret,
+                              return_final=return_final)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("imm", "lane_tile", "symmetrize",
+                                    "interpret", "return_final"))
+def _imm_bank_sequence(imm: IMMModel, zs, x0, P0, mu0, lane_tile: int,
+                       symmetrize: bool, interpret: bool,
+                       return_final: bool):
     zs = jnp.asarray(zs)
     T, N, m = zs.shape
     K, n = imm.K, imm.n

@@ -1,4 +1,11 @@
-"""Three-term roofline from dry-run artifacts (TPU v5e targets).
+"""Three-term roofline: machine peaks + the compute/memory/collective
+time terms.
+
+Originally built for the dry-run artifacts (TPU v5e targets); now also
+the model behind ``benchmarks/roofline.py``'s katana-kernel rows, which
+compare ``cost_analysis()``-measured FLOPs/bytes of the compiled
+programs against the analytic useful-work floor on a per-backend
+``Machine``.
 
 Methodology (DESIGN.md §4, calibrated on this container):
   * ``cost_analysis()`` is per-device, post-SPMD.
@@ -21,6 +28,32 @@ ICI_LINKS = 4                 # 2D torus: 4 links/chip; effective injection
 ICI_BW = ICI_BW_PER_LINK * ICI_LINKS
 
 
+@dataclass(frozen=True)
+class Machine:
+    """Per-backend roofline peaks. The cpu entry is an order-of-
+    magnitude reference for a few AVX2 cores (enough to classify a
+    program compute- vs memory-bound; not a calibrated model of any
+    particular host), the tpu_v5e entry the assignment-specified chip."""
+    name: str
+    peak_flops: float   # FLOP/s
+    mem_bw: float       # B/s
+    ici_bw: float       # B/s (collective injection; ~0 disables the term)
+
+
+MACHINES = {
+    "tpu_v5e": Machine("tpu_v5e", PEAK_FLOPS_BF16, HBM_BW, ICI_BW),
+    "cpu": Machine("cpu", 1.0e11, 2.0e10, 1.0e9),
+}
+
+
+def machine_for_backend(backend: str) -> Machine:
+    """Map a jax backend name to its roofline Machine (TPU backends to
+    the v5e reference chip, anything unknown to the cpu reference)."""
+    if backend.startswith("tpu"):
+        return MACHINES["tpu_v5e"]
+    return MACHINES.get(backend, MACHINES["cpu"])
+
+
 @dataclass
 class RooflineTerms:
     t_compute: float
@@ -30,6 +63,7 @@ class RooflineTerms:
     bytes_dev: float
     coll_bytes_dev: float
     model_flops_dev: float = 0.0
+    peak_flops: float = PEAK_FLOPS_BF16  # the machine the terms used
 
     @property
     def dominant(self) -> str:
@@ -53,7 +87,7 @@ class RooflineTerms:
         collective-bound."""
         if self.bound <= 0:
             return 0.0
-        return self.model_flops_dev / (self.bound * PEAK_FLOPS_BF16)
+        return self.model_flops_dev / (self.bound * self.peak_flops)
 
 
 def terms_from(flops_dev: float, bytes_dev: float, coll_wire_bytes_dev: float,
@@ -66,6 +100,23 @@ def terms_from(flops_dev: float, bytes_dev: float, coll_wire_bytes_dev: float,
         flops_dev=flops_dev, bytes_dev=bytes_dev,
         coll_bytes_dev=coll_wire_bytes_dev,
         model_flops_dev=model_flops_dev,
+    )
+
+
+def terms_on(machine: Machine, flops_dev: float, bytes_dev: float,
+             coll_wire_bytes_dev: float = 0.0,
+             model_flops_dev: float = 0.0) -> RooflineTerms:
+    """``terms_from`` against an explicit ``Machine`` (the katana-kernel
+    roofline path; ``terms_from`` keeps the TPU-v5e dry-run contract)."""
+    return RooflineTerms(
+        t_compute=flops_dev / machine.peak_flops,
+        t_memory=bytes_dev / machine.mem_bw,
+        t_collective=(coll_wire_bytes_dev / machine.ici_bw
+                      if machine.ici_bw else 0.0),
+        flops_dev=flops_dev, bytes_dev=bytes_dev,
+        coll_bytes_dev=coll_wire_bytes_dev,
+        model_flops_dev=model_flops_dev,
+        peak_flops=machine.peak_flops,
     )
 
 

@@ -88,6 +88,10 @@ class TrackingEngine:
     def __init__(self, model, cfg: Optional[TrackerConfig] = None):
         self.model = model
         self.cfg = cfg or TrackerConfig()
+        # the resolved execution mode (KATANA_MODE / cfg.mode): recorded
+        # here so serving telemetry can always say whether the kernels
+        # ran compiled or through the interpreter
+        self.exec_mode = self.cfg.exec_mode()
         self.is_imm = isinstance(model, IMMModel)
         if self.is_imm:
             self.bank = init_imm_bank(model, self.cfg.capacity,
@@ -163,7 +167,8 @@ class TrackingEngine:
         t0 = time.perf_counter()
         out = seq(self.model, jnp.asarray(zs),
                   jnp.asarray(x0, jnp.float32),
-                  jnp.asarray(P0, jnp.float32))
+                  jnp.asarray(P0, jnp.float32),
+                  interpret=self.exec_mode.interpret)
         out.block_until_ready()
         self.stats.replay_latency_s += time.perf_counter() - t0
         self.stats.replay_frames += T
@@ -195,6 +200,7 @@ class ShardedBankEngine:
                  cfg: Optional[TrackerConfig] = None, mesh=None):
         self.model = model
         self.cfg = cfg or TrackerConfig(capacity=64, max_meas=32)
+        self.exec_mode = self.cfg.exec_mode()
         self.n = n_sensors
         self.is_imm = isinstance(model, IMMModel)
         self.mesh = mesh
@@ -275,6 +281,7 @@ class ShardedBankEngine:
         imm = self.model if self.is_imm else as_imm(self.model)
         C, K, n, m = self.cfg.capacity, imm.K, imm.n, imm.m
         is_imm = self.is_imm
+        interp = self.exec_mode.interpret
 
         def body(banks, zs, *rest):
             T, S_loc = zs.shape[0], zs.shape[1]
@@ -288,7 +295,8 @@ class ShardedBankEngine:
                 mu0 = None
             v = rest[0].reshape(T, S_loc * C) if rest else None
             out = katana_imm_sequence(imm, zs.reshape(T, S_loc * C, m),
-                                      x0, P0, mu0=mu0, valid=v)
+                                      x0, P0, mu0=mu0, valid=v,
+                                      interpret=interp)
             return out.reshape(T, S_loc, C, n)
 
         if self.mesh is None:

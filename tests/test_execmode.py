@@ -1,0 +1,145 @@
+"""Execution-mode resolution: env plumbing, loud fallback, row labels.
+
+The contract under test (src/repro/execmode.py): a single resolver
+decides interpret-vs-compiled for every kernel op; a ``compiled``
+request on a backend that can't lower Pallas falls back LOUDLY
+(``ExecModeFallbackWarning`` + non-None ``fallback``); per-BENCH-row
+labels call XLA-native paths compiled everywhere but Pallas paths
+compiled only when natively lowered. The CI compiled-mode job relies
+on every one of these properties.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.execmode import (ENV_VAR, ExecMode, ExecModeFallbackWarning,
+                            active_mode, pallas_lowering_supported,
+                            resolve_interpret, resolve_mode)
+
+
+def test_auto_resolves_to_backend_capability():
+    m = resolve_mode("auto")
+    assert m.requested == "auto"
+    assert m.backend == jax.default_backend()
+    assert m.pallas_native == pallas_lowering_supported(m.backend)
+    # auto never warns and never records a fallback
+    assert m.fallback is None
+    assert m.mode == ("compiled" if m.pallas_native else "interpret")
+
+
+def test_interpret_request_is_always_honored():
+    m = resolve_mode("interpret")
+    assert m.mode == "interpret"
+    assert m.interpret is True
+    assert m.fallback is None
+
+
+def test_compiled_request_is_never_silent():
+    """compiled either really compiles or records a loud fallback —
+    there is no third state. (_resolve is lru_cached, so the warning
+    fires once per process: clear the cache to observe it here.)"""
+    from repro.execmode import _resolve
+
+    _resolve.cache_clear()
+    try:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            m = resolve_mode("compiled")
+        fired = [w for w in caught
+                 if issubclass(w.category, ExecModeFallbackWarning)]
+        if m.pallas_native:
+            assert m.mode == "compiled"
+            assert m.fallback is None
+            assert not fired
+        else:
+            assert m.mode == "interpret"
+            assert m.fallback == f"pallas-lowering-unsupported:{m.backend}"
+            assert fired, "fallback must warn loudly"
+    finally:
+        _resolve.cache_clear()  # order-independence for other tests
+
+
+def test_env_var_drives_active_mode(monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "interpret")
+    assert active_mode().requested == "interpret"
+    monkeypatch.setenv(ENV_VAR, "AUTO")  # case/space tolerant
+    assert active_mode().requested == "auto"
+    monkeypatch.delenv(ENV_VAR)
+    assert active_mode().requested == "auto"
+
+
+def test_bad_mode_rejected(monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "turbo")
+    with pytest.raises(ValueError, match="turbo"):
+        active_mode()
+
+
+def test_explicit_interpret_beats_mode():
+    """Tests pin the interpreter with interpret=True regardless of the
+    requested mode — the ops-level shim must honor that."""
+    assert resolve_interpret(True, mode="interpret") is True
+    assert resolve_interpret(False, mode="interpret") is False
+    assert resolve_interpret(None, mode="interpret") is True
+
+
+def test_row_labels_are_honest():
+    """XLA rows are compiled everywhere; Pallas rows are compiled only
+    when the kernel itself lowered natively."""
+    native = ExecMode("compiled", "compiled", "tpu", True, None, "x")
+    fell_back = ExecMode("compiled", "interpret", "cpu", False,
+                         "pallas-lowering-unsupported:cpu", "x")
+    assert native.lowering(pallas=True) == "pallas"
+    assert native.row_mode(pallas=True) == "compiled"
+    assert fell_back.lowering(pallas=True) == "pallas-interpret"
+    assert fell_back.row_mode(pallas=True) == "interpret"
+    for m in (native, fell_back):
+        assert m.lowering(pallas=False) == "xla"
+        assert m.row_mode(pallas=False) == "compiled"
+
+
+def test_as_meta_round_trips_the_facts():
+    m = resolve_mode("auto")
+    meta = m.as_meta()
+    assert meta["backend"] == m.backend
+    assert meta["mode"] == m.mode
+    assert meta["requested"] == "auto"
+    assert meta["jax"] == jax.__version__
+    assert meta["fallback"] is None
+
+
+def test_ops_honor_resolved_mode(monkeypatch):
+    """End-to-end: KATANA_MODE threads env -> resolver -> ops wrapper
+    -> pallas_call, and the result is unchanged (same math, different
+    dispatch route is only possible where the backend lowers Pallas)."""
+    import jax.numpy as jnp
+
+    from repro.core.filters import get_filter
+    from repro.kernels.katana_bank.ops import katana_bank
+
+    model = get_filter("lkf")
+    N = 4
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.tile(model.x0, (N, 1)), jnp.float32)
+    P = jnp.asarray(np.tile(model.P0, (N, 1, 1)), jnp.float32)
+    z = jnp.asarray(rng.normal(size=(N, model.m)), jnp.float32)
+
+    x_pinned, P_pinned = katana_bank(model, x, P, z, interpret=True)
+    monkeypatch.setenv(ENV_VAR, "compiled")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", ExecModeFallbackWarning)
+        x_env, P_env = katana_bank(model, x, P, z)
+    np.testing.assert_allclose(np.asarray(x_env), np.asarray(x_pinned),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(P_env), np.asarray(P_pinned),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_tracker_config_carries_mode():
+    from repro.core.tracker import TrackerConfig
+
+    m = TrackerConfig(capacity=8, max_meas=4, mode="interpret").exec_mode()
+    assert m.requested == "interpret" and m.interpret
+    # default config defers to the environment resolver
+    assert TrackerConfig(capacity=8, max_meas=4).exec_mode() == active_mode()
