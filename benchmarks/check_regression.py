@@ -88,6 +88,21 @@ def collect(root: Optional[pathlib.Path] = None) -> Dict[str, float]:
                 out[f"{p}/frame/sharded/devices={r['devices']}"
                     f"/S={r['S']}/fused_vs_einsum"] = \
                     r["speedup_fused_vs_einsum"]
+
+    serving = _load(root, "BENCH_serving.json")
+    if serving:
+        p = _prefix(serving)
+        # only the DETERMINISTIC serving columns are pinnable: the
+        # fake-clock drive makes served/recovered exact counts on any
+        # machine, while frames_per_sec is wall-clock noise
+        for r in serving["load_rows"]:
+            out[f"{p}/serving/load={r['offered_x']}x"
+                f"/tenants={r['tenants']}/served_fraction"] = \
+                r["served_fraction"]
+        fo = serving.get("failover")
+        if fo:
+            out[f"{p}/serving/failover/tenants={fo['tenants']}"
+                f"/recovered"] = fo["recovered"]
     return out
 
 

@@ -19,7 +19,7 @@ import traceback
 from typing import List
 
 ALL = ("accuracy", "fig4", "batching", "table1", "roofline", "scan_fusion",
-       "imm", "frame")
+       "imm", "frame", "serving")
 
 SMOKE_KWARGS = {
     # roofline: the census/cost_analysis wiring is the point; tiny
@@ -35,6 +35,10 @@ SMOKE_KWARGS = {
     # sensors=8 so the 8-device sharded row actually runs under the
     # bench-smoke job's forced 8-device host platform
     "frame": dict(Cs=(16,), M=8, sensors=8, sensor_frames=4),
+    # deterministic behavior (fake clock + seeded scenes), so the
+    # served/recovered fractions the regression gate pins are exact
+    # at these shapes; the fps column is machine noise in CI
+    "serving": dict(tenants=3, cycles=24),
 }
 
 

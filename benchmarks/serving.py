@@ -1,0 +1,191 @@
+"""Streaming front-end serving bench: sustained throughput vs offered
+load, and recovery after a shard kill (serving/stream.py).
+
+Three offered-load points — 0.5x, 1x and 2x of the front end's service
+rate (one frame per tenant per pump) — each driven on a fake clock so
+the BEHAVIOR (admission decisions, ladder tiers, shed counts) is fully
+deterministic; only the wall-clock fps differs per machine. Reported
+per row:
+
+  * ``frames_per_sec``   — applied tenant-frames per wall second over
+    the pump loop (compile excluded by explicit warmup);
+  * ``served_fraction``  — applied frames that carried measurements
+    (1.0 below saturation; the degradation ladder + anti-starvation
+    floor set the 2x value);
+  * ``shed_fraction``    — offered frames shed anywhere (ladder coast,
+    drop-oldest, deadline expiry) / submitted;
+  * ``reject_fraction``  — admission-rejected / submitted.
+
+The ``failover`` section kills a shard mid-run and reports how many
+driver cycles until every migrated tenant produced an update again,
+plus the fraction of tenants that recovered (1.0 or the gate is red —
+``tests/test_chaos.py`` separately proves the recovery is bitwise).
+
+Results land in BENCH_serving.json; check_regression pins the
+DETERMINISTIC columns (served fractions, failover recovery) — never
+the machine-dependent fps.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import bench_meta
+from repro.core.filters import make_imm
+from repro.core.tracker import TrackerConfig
+from repro.serving.faults import ChaosDriver, FaultPlan
+from repro.serving.stream import (ServiceTier, StreamConfig,
+                                  StreamFrontEnd)
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_serving.json"
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _scene(seed: int):
+    rng = np.random.default_rng(seed)
+    pos = rng.normal(scale=8.0, size=(2, 3)).astype(np.float32)
+    steps = rng.normal(scale=0.2, size=(512, 2, 3)).astype(np.float32)
+
+    def scene(i):
+        return pos + steps[: (i % 512) + 1].sum(0)
+
+    return scene
+
+
+def _front(tenants: int, tracker: TrackerConfig) -> StreamFrontEnd:
+    clk = _Clock()
+    lanes = max(tenants, 2)  # one shard must be able to absorb all
+    front = StreamFrontEnd(
+        make_imm(),
+        StreamConfig(n_shards=2, lanes_per_shard=lanes, queue_depth=4,
+                     checkpoint_every=8, heartbeat_timeout_s=1.0),
+        tracker, ckpt_dir=tempfile.mkdtemp(prefix="bench_serving_"),
+        clock=clk)
+    for i in range(tenants):
+        front.attach(f"tenant{i}")
+    return front
+
+
+def _warmup(front: StreamFrontEnd) -> None:
+    """Compile both tier steps before any timer starts."""
+    import jax.numpy as jnp
+    L = front.cfg.lanes_per_shard
+    M, m = front.tracker.max_meas, front.model.m
+    zb = jnp.zeros((L, M, m), jnp.float32)
+    vb = jnp.zeros((L, M), bool)
+    for tier in (ServiceTier.FULL, ServiceTier.WIDE_GATE):
+        front._step_for(tier)(front.shards[0].banks, zb, vb)
+
+
+def _load_row(offered_x: float, tenants: int, cycles: int,
+              tracker: TrackerConfig) -> Dict:
+    front = _front(tenants, tracker)
+    _warmup(front)
+    scenes = {t: _scene(50 + i)
+              for i, t in enumerate(sorted(front.tenants))}
+    counts = {t: 0 for t in scenes}
+    acc = 0.0
+    applied = 0
+    t0 = time.perf_counter()
+    for _ in range(cycles):
+        acc += offered_x
+        while acc >= 1.0 - 1e-9:
+            acc -= 1.0
+            for t, scene in scenes.items():
+                front.submit(t, scene(counts[t]))
+                counts[t] += 1
+        applied += len(front.pump())
+        front.clock.advance(0.05)
+    # drain the backlog so every accepted frame is accounted for
+    for _ in range(4 * front.cfg.queue_depth):
+        ups = front.pump()
+        if not ups:
+            break
+        applied += len(ups)
+        front.clock.advance(0.05)
+    wall = time.perf_counter() - t0
+    s = front.stats
+    return dict(
+        offered_x=offered_x,
+        tenants=tenants,
+        cycles=cycles,
+        frames_per_sec=applied / wall if wall else 0.0,
+        applied=applied,
+        submitted=s.submitted,
+        served_fraction=s.served / s.applied if s.applied else 0.0,
+        shed_fraction=(s.shed + s.replaced_oldest + s.expired)
+        / s.submitted if s.submitted else 0.0,
+        reject_fraction=(s.rejected_overload + s.rejected_queue_full)
+        / s.submitted if s.submitted else 0.0,
+    )
+
+
+def _failover_row(tenants: int, cycles: int,
+                  tracker: TrackerConfig) -> Dict:
+    front = _front(tenants, tracker)
+    _warmup(front)
+    kill_at = cycles // 3
+    scenes = {t: _scene(90 + i)
+              for i, t in enumerate(sorted(front.tenants))}
+    drv = ChaosDriver(front, FaultPlan(kill_shards={kill_at: 0}),
+                      scenes, front.clock.advance, dt_s=0.5)
+    t0 = time.perf_counter()
+    rep = drv.run(cycles)
+    wall = time.perf_counter() - t0
+    recovery = (max(rep.recovered_at.values()) - kill_at
+                if rep.recovered_at else -1)
+    return dict(
+        tenants=tenants,
+        cycles=cycles,
+        kill_cycle=kill_at,
+        exceptions=len(rep.exceptions),
+        failovers=front.stats.failovers,
+        parked=front.stats.parked,
+        recovery_cycles=recovery,
+        recovered=(front.stats.failovers
+                   / max(1, front.stats.failovers + front.stats.parked)),
+        wall_s=wall,
+    )
+
+
+def run(csv: List[str], tenants: int = 6, cycles: int = 60) -> None:
+    tracker = TrackerConfig(capacity=8, max_meas=4)
+    load_rows = [_load_row(x, tenants, cycles, tracker)
+                 for x in (0.5, 1.0, 2.0)]
+    failover = _failover_row(tenants, max(12, cycles // 2), tracker)
+    for r in load_rows:
+        csv.append(
+            f"serving/load={r['offered_x']}x/tenants={tenants},"
+            f"{1e6 / r['frames_per_sec']:.1f},"
+            f"frames_per_sec={r['frames_per_sec']:.1f};"
+            f"served_fraction={r['served_fraction']:.4f};"
+            f"shed_fraction={r['shed_fraction']:.4f};"
+            f"reject_fraction={r['reject_fraction']:.4f}")
+    csv.append(
+        f"serving/failover/tenants={failover['tenants']},0,"
+        f"recovery_cycles={failover['recovery_cycles']};"
+        f"recovered={failover['recovered']:.2f};"
+        f"exceptions={failover['exceptions']}")
+    BENCH_JSON.write_text(json.dumps(dict(
+        meta=bench_meta(),
+        tenants=tenants,
+        cycles=cycles,
+        load_rows=load_rows,
+        failover=failover,
+    ), indent=2) + "\n")

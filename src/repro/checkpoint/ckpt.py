@@ -5,6 +5,23 @@ tmp-dir + os.rename (atomic on POSIX). Arrays are saved device-layout-
 free (full logical arrays), so restore can re-shard onto ANY mesh —
 elastic scaling up/down is a restore-time concern only
 (``restore(..., shardings=...)`` device_puts against the new mesh).
+
+Failure contract (the serving/training loops depend on every clause):
+
+* a crash mid-save leaves only a ``.tmp_step_*`` dir — the committed
+  steps are never touched, and the next ``save`` (same step or not)
+  sweeps stale tmp dirs and still commits atomically;
+* ``restore`` validates the manifest's recorded names/shapes/dtypes
+  against the ``like`` tree and raises ``CheckpointMismatchError``
+  instead of silently unflattening garbage into the wrong structure;
+* ``restore(step=None)`` tolerates a concurrent keep-N GC (another
+  process or an in-flight async save) deleting the step it just
+  listed: it falls back to the next-newest surviving step;
+* ``CheckpointManager.save(blocking=True)`` raises save errors
+  immediately (not on the next call), async errors surface on the
+  next ``save()``/``wait()``; a successful commit is never failed
+  retroactively by a keep-N GC hiccup (GC errors warn, they don't
+  raise).
 """
 from __future__ import annotations
 
@@ -13,11 +30,18 @@ import os
 import shutil
 import threading
 import time
+import warnings
+import zipfile
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointMismatchError(ValueError):
+    """The checkpoint's recorded tree (names/shapes/dtypes) does not
+    match the ``like`` tree it is being restored into."""
 
 
 def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
@@ -27,6 +51,15 @@ def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
     return list(zip(names, leaves)), treedef
 
 
+def _sweep_stale_tmp(root: Path) -> None:
+    """Remove leftover ``.tmp_step_*`` dirs from crashed saves. Only
+    called while no save of OURS is in flight (module ``save`` is
+    synchronous; the manager holds one in-flight save and joins it
+    first), so anything matching is garbage by construction."""
+    for p in root.glob(".tmp_step_*"):
+        shutil.rmtree(p, ignore_errors=True)
+
+
 def save(ckpt_dir: str, step: int, state, extra: Optional[Dict] = None
          ) -> Path:
     """Blocking atomic save of a pytree (+ json-serializable extras)."""
@@ -34,8 +67,7 @@ def save(ckpt_dir: str, step: int, state, extra: Optional[Dict] = None
     root.mkdir(parents=True, exist_ok=True)
     final = root / f"step_{step:08d}"
     tmp = root / f".tmp_step_{step:08d}_{os.getpid()}"
-    if tmp.exists():
-        shutil.rmtree(tmp)
+    _sweep_stale_tmp(root)  # crashed prior saves (any pid, any step)
     tmp.mkdir(parents=True)
     named, treedef = _flatten(state)
     arrays = {f"a{i}": np.asarray(v) for i, (_, v) in enumerate(named)}
@@ -43,7 +75,8 @@ def save(ckpt_dir: str, step: int, state, extra: Optional[Dict] = None
     manifest = {
         "step": step,
         "names": [n for n, _ in named],
-        "dtypes": [str(np.asarray(v).dtype) for _, v in named],
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "shapes": [list(a.shape) for a in arrays.values()],
         "extra": extra or {},
     }
     (tmp / "manifest.json").write_text(json.dumps(manifest))
@@ -61,22 +94,86 @@ def available_steps(ckpt_dir: str) -> List[int]:
                   if (p / "manifest.json").exists())
 
 
+def _validate(manifest: Dict, like, leaves) -> None:
+    """Names/shapes/dtypes of the checkpoint vs the ``like`` tree.
+    ``like`` leaves may be concrete arrays or abstract
+    (ShapeDtypeStruct) — anything exposing shape/dtype is checked;
+    bare leaves without them only get the name/count check."""
+    named, _ = _flatten(like)
+    want_names = [n for n, _ in named]
+    got_names = manifest["names"]
+    if want_names != got_names:
+        missing = [n for n in want_names if n not in got_names]
+        surplus = [n for n in got_names if n not in want_names]
+        raise CheckpointMismatchError(
+            f"checkpoint tree does not match `like`: checkpoint has "
+            f"{len(got_names)} leaves {got_names[:4]}..., `like` wants "
+            f"{len(want_names)} {want_names[:4]}...; missing from "
+            f"checkpoint: {missing or 'none'}; not in `like`: "
+            f"{surplus or 'none'}")
+    shapes = manifest.get("shapes")  # absent in pre-shape manifests
+    for i, (name, leaf) in enumerate(named):
+        got_dtype = np.dtype(manifest["dtypes"][i])
+        got_shape = tuple(shapes[i]) if shapes else np.shape(leaves[i])
+        want_dtype = getattr(leaf, "dtype", None)
+        want_shape = getattr(leaf, "shape", None)
+        if want_dtype is not None and np.dtype(want_dtype) != got_dtype:
+            raise CheckpointMismatchError(
+                f"leaf '{name}': checkpoint dtype {got_dtype} != `like` "
+                f"dtype {np.dtype(want_dtype)}")
+        if want_shape is not None and tuple(want_shape) != got_shape:
+            raise CheckpointMismatchError(
+                f"leaf '{name}': checkpoint shape {got_shape} != `like` "
+                f"shape {tuple(want_shape)}")
+
+
+def _load_step(d: Path, like):
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "arrays.npz")
+    leaves = [data[f"a{i}"] for i in range(len(manifest["names"]))]
+    _validate(manifest, like, leaves)
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
 def restore(ckpt_dir: str, like, step: Optional[int] = None,
             shardings=None) -> Tuple[Any, Dict]:
     """Restore into the structure of `like` (a pytree or abstract tree).
 
+    The checkpoint's manifest (names, shapes, dtypes) is validated
+    against `like` — a mismatched tree raises
+    ``CheckpointMismatchError`` instead of unflattening garbage.
+
+    step=None restores the newest step and falls back to older
+    surviving steps if the newest vanishes mid-read (a concurrent
+    keep-N GC from another process/thread); an explicit ``step`` never
+    falls back.
+
     shardings: optional matching pytree of NamedSharding — arrays are
     device_put against it (elastic restore onto a different mesh)."""
-    steps = available_steps(ckpt_dir)
-    if not steps:
-        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    step = steps[-1] if step is None else step
-    d = Path(ckpt_dir) / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())
-    data = np.load(d / "arrays.npz")
-    leaves = [data[f"a{i}"] for i in range(len(manifest["names"]))]
-    treedef = jax.tree_util.tree_structure(like)
-    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    explicit = step is not None
+    tried: set = set()
+    while True:
+        steps = [s for s in available_steps(ckpt_dir) if s not in tried]
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+        use = step if explicit else steps[-1]
+        d = Path(ckpt_dir) / f"step_{use:08d}"
+        try:
+            restored, manifest = _load_step(d, like)
+            break
+        except CheckpointMismatchError:
+            raise  # a real tree mismatch, not corruption — never retry
+        except (FileNotFoundError, zipfile.BadZipFile, KeyError, OSError,
+                ValueError):  # ValueError: np.load on a truncated npz
+            if explicit:
+                raise
+            # the step we listed was GC'd (or half-deleted) under us —
+            # drop to the next-newest survivor, or give up loudly
+            tried.add(use)
+            if not [s for s in available_steps(ckpt_dir)
+                    if s not in tried]:
+                raise
     if shardings is not None:
         restored = jax.tree.map(
             lambda a, s: jax.device_put(a, s), restored, shardings)
@@ -87,33 +184,52 @@ class CheckpointManager:
     """Async keep-N manager: save() returns immediately (a background
     thread does the IO + commit + GC); wait() joins outstanding work.
     One in-flight save at a time (the next save waits — backpressure
-    beats unbounded queueing on a training loop)."""
+    beats unbounded queueing on a training loop).
+
+    Error ordering: ``save(blocking=True)`` raises its own failure
+    in-call; an async save's failure surfaces on the NEXT ``save()``,
+    ``wait()`` or ``restore_latest()`` (whichever comes first, once). A
+    keep-N GC failure after a successful commit is a warning, never an
+    error — the checkpoint IS on disk."""
 
     def __init__(self, ckpt_dir: str, keep_n: int = 3):
         self.dir = ckpt_dir
         self.keep_n = keep_n
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # a crashed predecessor's tmp dirs are garbage; sweep them so
+        # they don't sit next to the committed steps forever
+        if Path(ckpt_dir).exists():
+            _sweep_stale_tmp(Path(ckpt_dir))
 
     def save(self, step: int, state, extra: Optional[Dict] = None,
              blocking: bool = False) -> None:
-        self.wait()
+        self.wait()  # joins the in-flight save; raises ITS failure here
         # snapshot to host memory synchronously (device buffers may be
         # donated/mutated by the next step)
         host_state = jax.tree.map(lambda x: np.asarray(x), state)
 
         def work():
+            save(self.dir, step, host_state, extra)
             try:
-                save(self.dir, step, host_state, extra)
                 self._gc()
+            except OSError as e:  # committed fine; GC hygiene can wait
+                warnings.warn(f"checkpoint GC under {self.dir} failed "
+                              f"(step {step} committed): {e!r}",
+                              RuntimeWarning, stacklevel=2)
+
+        if blocking:
+            work()  # errors raise HERE, not on the next call
+            return
+
+        def guarded():
+            try:
+                work()
             except BaseException as e:  # noqa: BLE001
                 self._error = e
 
-        if blocking:
-            work()
-        else:
-            self._thread = threading.Thread(target=work, daemon=True)
-            self._thread.start()
+        self._thread = threading.Thread(target=guarded, daemon=True)
+        self._thread.start()
 
     def wait(self) -> None:
         if self._thread is not None:
@@ -124,7 +240,7 @@ class CheckpointManager:
             raise err
 
     def restore_latest(self, like, shardings=None):
-        self.wait()
+        self.wait()  # join in-flight work: no GC can race the listing
         return restore(self.dir, like, shardings=shardings)
 
     def _gc(self) -> None:

@@ -261,6 +261,34 @@ def stack_sensor_banks(bank, n_sensors: int):
     return jax.tree.map(put, bank, bank_sensor_axes(bank))
 
 
+def slice_sensor_bank(banks, s: int):
+    """Extract sensor/lane ``s`` of a stacked bank as a single-sensor
+    bank (the inverse of one lane of ``stack_sensor_banks``).
+
+    This is the checkpoint/failover surface: a tenant's lane of the
+    serving fleet is snapshotted and restored as a plain
+    BankState/IMMBankState pytree, so ``checkpoint.ckpt`` can save it
+    and a different shard/lane can receive it without knowing the
+    fleet layout. Works on BankState and IMMBankState alike."""
+    return jax.tree.map(
+        lambda x, a: jax.lax.index_in_dim(x, s, axis=a, keepdims=False),
+        banks, bank_sensor_axes(banks))
+
+
+def place_sensor_bank(banks, s: int, one):
+    """Write a single-sensor bank into lane ``s`` of a stacked bank
+    (the other lanes untouched) — the restore half of
+    ``slice_sensor_bank``. Used by the streaming front end's failover
+    path to graft a checkpointed tenant bank onto a surviving shard's
+    stack. Returns the new stacked bank."""
+
+    def put(full, x, a):
+        idx = tuple(slice(None) for _ in range(a)) + (s,)
+        return full.at[idx].set(jnp.asarray(x, full.dtype))
+
+    return jax.tree.map(put, banks, one, bank_sensor_axes(banks))
+
+
 def prune_bank(bank, max_misses: int = 5):
     """Retire tracks that coasted too long; their slots become free.
     Works on BankState and IMMBankState alike (shared lifecycle

@@ -61,6 +61,17 @@ class TrackerConfig:
     # that can't lower Pallas falls back to the interpreter loudly
     # (repro.execmode.ExecModeFallbackWarning) — never silently.
     mode: Optional[str] = None
+    # Degradation knobs (the streaming front end's service ladder,
+    # repro.serving.stream): gate_scale multiplies the chi-square gate —
+    # a widened gate keeps tracks associated under degraded measurement
+    # quality at the cost of more clutter acceptance. 1.0 = nominal.
+    gate_scale: float = 1.0
+    # Guard against non-finite measurements: a z row containing NaN/inf
+    # is treated as "no detection" (its valid bit is cleared, the slot
+    # coasts) instead of poisoning the bank state through the update
+    # einsums. Serving front ends rely on this to survive corrupt
+    # sensor payloads without a bank reset.
+    nan_guard: bool = True
 
     def exec_mode(self):
         """The resolved ``repro.execmode.ExecMode`` for this tracker."""
@@ -126,6 +137,29 @@ def _use_fused_frame(model, cfg: TrackerConfig) -> bool:
     return cfg.fused_frame and frame_kernel_supported(model)
 
 
+def _frame_inputs(model, cfg: TrackerConfig, z: jnp.ndarray,
+                  z_valid: jnp.ndarray):
+    """Shared frame-step preamble: the (scaled) gate, the assignment
+    round bound, the dtype-cast measurements and the (possibly
+    NaN-guarded) validity mask.
+
+    Applied BEFORE the fused/einsum route split so both paths see
+    bit-identical inputs — the equivalence oracle covers the guarded
+    path for free. With all-finite measurements the guard is the
+    identity (bitwise)."""
+    dtype = jnp.dtype(cfg.dtype)
+    gate = (cfg.gate or CHI2_99.get(model.m, 16.0)) * cfg.gate_scale
+    rounds = min(cfg.capacity, cfg.max_meas)
+    zt = z.astype(dtype)
+    if cfg.nan_guard:
+        finite = jnp.isfinite(zt).all(axis=-1)
+        z_valid = z_valid & finite
+        # zero (not just mask) the corrupt rows: 0·NaN = NaN would still
+        # poison the update einsums the select runs after
+        zt = jnp.where(finite[:, None], zt, 0.0)
+    return dtype, float(gate), rounds, zt, z_valid
+
+
 def frame_step(model: FilterModel, cfg: TrackerConfig, bank: BankState,
                z: jnp.ndarray, z_valid: jnp.ndarray) -> FrameResult:
     """One tracking frame. z: (max_meas, m); z_valid: (max_meas,) bool.
@@ -137,10 +171,7 @@ def frame_step(model: FilterModel, cfg: TrackerConfig, bank: BankState,
     is the equivalence oracle (identical assoc/ids, float32-tolerance
     states — tests/test_frame_kernel.py) and the fallback for models
     outside the kernel's contract."""
-    dtype = jnp.dtype(cfg.dtype)
-    gate = cfg.gate or CHI2_99.get(model.m, 16.0)
-    rounds = min(cfg.capacity, cfg.max_meas)
-    zt = z.astype(dtype)
+    dtype, gate, rounds, zt, z_valid = _frame_inputs(model, cfg, z, z_valid)
     if _use_fused_frame(model, cfg):
         from repro.kernels.katana_bank.ops import katana_frame
 
@@ -190,10 +221,7 @@ def imm_frame_step(imm: IMMModel, cfg: TrackerConfig, bank: IMMBankState,
     dispatch; XLA keeps spawn/prune and patches the combined estimate
     of freshly-spawned slots (their combined state IS the seed state).
     """
-    dtype = jnp.dtype(cfg.dtype)
-    gate = cfg.gate or CHI2_99.get(imm.m, 16.0)
-    rounds = min(cfg.capacity, cfg.max_meas)
-    zt = z.astype(dtype)
+    dtype, gate, rounds, zt, z_valid = _frame_inputs(imm, cfg, z, z_valid)
     fused = _use_fused_frame(imm, cfg)
     if fused:
         from repro.kernels.katana_bank.ops import katana_imm_frame

@@ -28,6 +28,11 @@ class HeartbeatMonitor:
     def beat(self, host: str) -> None:
         self.last_seen[host] = self.clock()
 
+    def remove(self, host: str) -> None:
+        """Decommission a host (it was failed over / drained): it must
+        stop showing up in ``dead_hosts`` forever after."""
+        self.last_seen.pop(host, None)
+
     def dead_hosts(self) -> List[str]:
         now = self.clock()
         return [h for h, t in self.last_seen.items()
@@ -48,10 +53,15 @@ class StragglerDetector:
         self.ewma: Dict[str, Optional[float]] = {h: None for h in hosts}
 
     def record(self, host: str, step_time_s: float) -> None:
-        prev = self.ewma[host]
+        prev = self.ewma.get(host)
         self.ewma[host] = (step_time_s if prev is None
                            else self.alpha * step_time_s
                            + (1 - self.alpha) * prev)
+
+    def remove(self, host: str) -> None:
+        """Drop a decommissioned host from the fleet statistics (its
+        stale EWMA must not skew the median for the survivors)."""
+        self.ewma.pop(host, None)
 
     def stragglers(self) -> List[str]:
         vals = [v for v in self.ewma.values() if v is not None]

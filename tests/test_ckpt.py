@@ -1,0 +1,228 @@
+"""Checkpointing failure contract (checkpoint/ckpt.py).
+
+The serving failover path trusts every clause of the module docstring,
+so each one is induced here:
+
+  * restore validates names/dtypes/shapes against the manifest and
+    raises ``CheckpointMismatchError`` with a readable message instead
+    of unflattening garbage into the wrong tree;
+  * a crash mid-save leaves a ``.tmp_step_*`` dir behind and the NEXT
+    save still commits atomically (and sweeps the garbage);
+  * ``CheckpointManager.save(blocking=True)`` raises its own failure
+    immediately; an async failure surfaces on the next call;
+  * ``restore(step=None)`` survives a keep-N GC deleting the newest
+    step out from under it (falls back to the next-newest survivor);
+  * a successful commit is never failed retroactively by a GC hiccup.
+"""
+import json
+import os
+import shutil
+import zipfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as C
+
+
+def _state(seed=0, n=4):
+    rng = np.random.default_rng(seed)
+    return {"x": rng.normal(size=(n, 3)).astype(np.float32),
+            "hits": np.arange(n, dtype=np.int32)}
+
+
+def _roundtrip(tmp_path, state):
+    C.save(str(tmp_path), 0, state)
+    return C.restore(str(tmp_path), jax_like(state))
+
+
+def jax_like(state):
+    return {k: np.empty_like(v) for k, v in state.items()}
+
+
+# -------------------------------------------------------------- validation
+class TestRestoreValidation:
+    def test_roundtrip_is_bitwise(self, tmp_path):
+        state = _state()
+        got, extra = _roundtrip(tmp_path, state)
+        for k in state:
+            np.testing.assert_array_equal(got[k], state[k])
+        assert extra == {}
+
+    def test_wrong_names_raise_with_both_sides(self, tmp_path):
+        C.save(str(tmp_path), 0, _state())
+        bad_like = {"x": np.empty((4, 3), np.float32),
+                    "age": np.empty((4,), np.int32)}
+        with pytest.raises(C.CheckpointMismatchError) as ei:
+            C.restore(str(tmp_path), bad_like)
+        msg = str(ei.value)
+        assert "age" in msg and "hits" in msg  # names both directions
+
+    def test_wrong_dtype_raises_named_leaf(self, tmp_path):
+        C.save(str(tmp_path), 0, _state())
+        like = _state()
+        like["hits"] = like["hits"].astype(np.int64)
+        with pytest.raises(C.CheckpointMismatchError, match="hits"):
+            C.restore(str(tmp_path), like)
+
+    def test_wrong_shape_raises_named_leaf(self, tmp_path):
+        C.save(str(tmp_path), 0, _state(n=4))
+        with pytest.raises(C.CheckpointMismatchError, match="hits"):
+            C.restore(str(tmp_path), _state(n=8))
+
+    def test_wrong_leaf_count_raises(self, tmp_path):
+        C.save(str(tmp_path), 0, _state())
+        with pytest.raises(C.CheckpointMismatchError):
+            C.restore(str(tmp_path), {"x": np.empty((4, 3), np.float32)})
+
+    def test_old_manifest_without_shapes_still_validates(self, tmp_path):
+        d = C.save(str(tmp_path), 0, _state())
+        man = json.loads((d / "manifest.json").read_text())
+        del man["shapes"]  # manifests from before the shape record
+        (d / "manifest.json").write_text(json.dumps(man))
+        got, _ = C.restore(str(tmp_path), jax_like(_state()))
+        np.testing.assert_array_equal(got["x"], _state()["x"])
+        with pytest.raises(C.CheckpointMismatchError):
+            C.restore(str(tmp_path), _state(n=8))  # shapes via arrays
+
+
+# ------------------------------------------------------------- crash paths
+class TestCrashMidSave:
+    def test_stale_tmp_dir_does_not_block_next_save(self, tmp_path):
+        root = Path(tmp_path)
+        C.save(str(root), 0, _state(0))
+        # a crashed save from another pid left its tmp dir behind
+        stale = root / ".tmp_step_00000001_99999"
+        stale.mkdir()
+        (stale / "arrays.npz").write_bytes(b"half-written garbage")
+        C.save(str(root), 1, _state(1))  # must commit atomically
+        assert not stale.exists(), "stale tmp dir swept"
+        got, _ = C.restore(str(root), jax_like(_state()))
+        np.testing.assert_array_equal(got["x"], _state(1)["x"])
+        assert C.available_steps(str(root)) == [0, 1]
+
+    def test_tmp_dirs_never_count_as_steps(self, tmp_path):
+        root = Path(tmp_path)
+        C.save(str(root), 3, _state())
+        (root / ".tmp_step_00000007_123").mkdir()
+        assert C.available_steps(str(root)) == [3]
+
+    def test_manager_init_sweeps_predecessor_garbage(self, tmp_path):
+        root = Path(tmp_path)
+        root.mkdir(exist_ok=True)
+        (root / ".tmp_step_00000000_42").mkdir()
+        C.CheckpointManager(str(root))
+        assert list(root.glob(".tmp_step_*")) == []
+
+
+# ---------------------------------------------------------- error ordering
+class TestManagerErrorOrdering:
+    def test_blocking_save_raises_immediately(self, tmp_path):
+        mgr = C.CheckpointManager(str(tmp_path / "as_file"))
+        (tmp_path / "as_file").write_text("not a directory")
+        with pytest.raises(OSError):
+            mgr.save(0, _state(), blocking=True)
+
+    def test_async_error_surfaces_on_next_call_once(self, tmp_path):
+        target = tmp_path / "as_file"
+        mgr = C.CheckpointManager(str(target))
+        target.write_text("not a directory")
+        mgr.save(0, _state())  # async: returns despite doomed IO
+        with pytest.raises(OSError):
+            mgr.wait()
+        mgr.wait()  # the error is raised once, not forever
+
+    def test_async_error_surfaces_on_next_save(self, tmp_path):
+        target = tmp_path / "as_file"
+        mgr = C.CheckpointManager(str(target))
+        target.write_text("not a directory")
+        mgr.save(0, _state())
+        with pytest.raises(OSError):
+            mgr.save(1, _state())  # carries the PREVIOUS failure
+        target.unlink()
+        mgr.save(1, _state(), blocking=True)  # now healthy
+        assert C.available_steps(str(target)) == [1]
+
+    def test_gc_failure_never_fails_a_committed_save(self, tmp_path,
+                                                     monkeypatch):
+        mgr = C.CheckpointManager(str(tmp_path), keep_n=1)
+        mgr.save(0, _state(0), blocking=True)
+
+        def broken_gc():
+            raise OSError("induced GC failure")
+
+        monkeypatch.setattr(mgr, "_gc", broken_gc)
+        with pytest.warns(RuntimeWarning, match="GC"):
+            mgr.save(1, _state(1), blocking=True)  # commit still lands
+        got, _ = mgr.restore_latest(jax_like(_state()))
+        np.testing.assert_array_equal(got["x"], _state(1)["x"])
+
+
+# ----------------------------------------------------------------- gc race
+class TestRestoreGcRace:
+    def test_newest_vanishing_falls_back(self, tmp_path, monkeypatch):
+        for s in range(3):
+            C.save(str(tmp_path), s, _state(s))
+        real = C._load_step
+        def racy(d, like):
+            if d.name == "step_00000002":
+                shutil.rmtree(d)  # GC wins the race on the newest
+                raise FileNotFoundError(d)
+            return real(d, like)
+        monkeypatch.setattr(C, "_load_step", racy)
+        got, _ = C.restore(str(tmp_path), jax_like(_state()))
+        np.testing.assert_array_equal(got["x"], _state(1)["x"])
+
+    def test_half_deleted_step_falls_back(self, tmp_path):
+        for s in range(2):
+            C.save(str(tmp_path), s, _state(s))
+        # a GC got through the npz but not the manifest: listed, broken
+        (Path(tmp_path) / "step_00000001" / "arrays.npz").unlink()
+        got, _ = C.restore(str(tmp_path), jax_like(_state()))
+        np.testing.assert_array_equal(got["x"], _state(0)["x"])
+
+    def test_corrupt_npz_falls_back(self, tmp_path):
+        for s in range(2):
+            C.save(str(tmp_path), s, _state(s))
+        (Path(tmp_path) / "step_00000001" / "arrays.npz").write_bytes(
+            b"ZZ not a zip")
+        got, _ = C.restore(str(tmp_path), jax_like(_state()))
+        np.testing.assert_array_equal(got["x"], _state(0)["x"])
+
+    def test_explicit_step_never_falls_back(self, tmp_path):
+        for s in range(2):
+            C.save(str(tmp_path), s, _state(s))
+        (Path(tmp_path) / "step_00000001" / "arrays.npz").write_bytes(
+            b"ZZ not a zip")
+        with pytest.raises((zipfile.BadZipFile, OSError, ValueError)):
+            C.restore(str(tmp_path), jax_like(_state()), step=1)
+
+    def test_everything_gone_raises_not_loops(self, tmp_path):
+        for s in range(2):
+            C.save(str(tmp_path), s, _state(s))
+        for s in range(2):
+            (Path(tmp_path) / f"step_{s:08d}" / "arrays.npz").unlink()
+        with pytest.raises((FileNotFoundError, OSError)):
+            C.restore(str(tmp_path), jax_like(_state()))
+
+    def test_no_checkpoints_at_all(self, tmp_path):
+        with pytest.raises(FileNotFoundError, match="no checkpoints"):
+            C.restore(str(tmp_path / "empty"), jax_like(_state()))
+
+
+# ------------------------------------------------------------------ keep-n
+def test_keep_n_gc(tmp_path):
+    mgr = C.CheckpointManager(str(tmp_path), keep_n=2)
+    for s in range(5):
+        mgr.save(s, _state(s), blocking=True)
+    assert C.available_steps(str(tmp_path)) == [3, 4]
+    got, extra = mgr.restore_latest(jax_like(_state()))
+    np.testing.assert_array_equal(got["x"], _state(4)["x"])
+
+
+def test_extra_payload_roundtrips(tmp_path):
+    C.save(str(tmp_path), 7, _state(),
+           extra={"tenant": "t0", "frame": 7, "ns_base": 1 << 20})
+    _, extra = C.restore(str(tmp_path), jax_like(_state()))
+    assert extra == {"tenant": "t0", "frame": 7, "ns_base": 1 << 20}
